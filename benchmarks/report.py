@@ -1,0 +1,108 @@
+"""Generates the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run artifacts.  Run after `python -m repro.launch.sweep`:
+
+    PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline import load_records, roofline_row
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "—"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_s(s):
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s*1e3:.2f}ms"
+    return f"{s*1e6:.0f}µs"
+
+
+def dryrun_table(mesh: str, variant: str = "baseline") -> str:
+    rows = ["| arch | shape | devices | compile | peak bytes/dev | "
+            "HLO collectives (count / moved bytes per dev) |",
+            "|---|---|---|---|---|---|"]
+    for rec in load_records(mesh, variant):
+        c = rec["collectives"]["_total"]
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['n_devices']} | "
+            f"{rec['compile_s']}s | "
+            f"{fmt_bytes(rec['memory'].get('peak_bytes'))} | "
+            f"{c['count']:.0f} / {fmt_bytes(c['moved_bytes'])} |")
+    return "\n".join(rows)
+
+
+def roofline_table_md(mesh: str, variant: str) -> str:
+    rows = ["| arch | shape | compute | memory | collective | dominant | "
+            "useful ratio | MFU bound | fits 16G |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for rec in load_records(mesh, variant):
+        r = roofline_row(rec)
+        if r is None:
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['mfu_upper_bound']:.3f} | "
+            f"{'yes' if r['fits_16g'] else 'NO'} |")
+    return "\n".join(rows)
+
+
+def variant_compare(arch: str, shape: str, mesh: str = "pod16x16") -> str:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec["arch"] == arch and rec["shape"] == shape \
+                and rec["mesh"] == mesh:
+            recs.append(rec)
+    rows = ["| variant | collective moved/dev | AR | AG | A2A | "
+            "peak bytes/dev |", "|---|---|---|---|---|---|"]
+    order = {"baseline": 0, "wg": 1, "wg_bf16": 2, "wg_ep": 3,
+             "wg_ep_bf16": 4, "cacheshard": 5, "bf16": 6}
+    for rec in sorted(recs, key=lambda r: order.get(r.get("variant"), 99)):
+        c = rec["collectives"]
+        rows.append(
+            f"| {rec.get('variant','baseline')} | "
+            f"{fmt_bytes(c['_total']['moved_bytes'])} | "
+            f"{fmt_bytes(c['all-reduce']['moved_bytes'])} | "
+            f"{fmt_bytes(c['all-gather']['moved_bytes'])} | "
+            f"{fmt_bytes(c['all-to-all']['moved_bytes'])} | "
+            f"{fmt_bytes(rec['memory'].get('peak_bytes'))} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    print("## §Dry-run — single pod (16×16)\n")
+    print(dryrun_table("pod16x16", "baseline"))
+    print("\n## §Dry-run — multi-pod (2×16×16)\n")
+    print(dryrun_table("pod2x16x16", "baseline"))
+    print("\n## §Roofline — baseline\n")
+    print(roofline_table_md("pod16x16", "baseline"))
+    print("\n## §Roofline — weight-gathered (optimized)\n")
+    print(roofline_table_md("pod16x16", "wg"))
+    for arch, shape in (("grok-1-314b", "train_4k"),
+                        ("deepseek-v2-236b", "train_4k"),
+                        ("deepseek-v2-236b", "decode_32k"),
+                        ("flux_dit", "flow_rl_update")):
+        print(f"\n## Variants — {arch} × {shape}\n")
+        print(variant_compare(arch, shape))
+
+
+if __name__ == "__main__":
+    main()

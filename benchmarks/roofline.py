@@ -1,0 +1,105 @@
+"""Roofline analysis (deliverable g): per (arch × shape × mesh) derive the
+three roofline terms from the dry-run artifacts:
+
+  compute    = FLOPs / (chips × 197 TF/s bf16)
+  memory     = HBM bytes / (chips × 819 GB/s)
+  collective = per-device link bytes moved / (50 GB/s ICI)
+
+FLOPs/HBM come from the analytic cost model (the CPU backend's
+cost_analysis() counts scan bodies once — documented in launch/costs.py);
+collective bytes come from the trip-count-corrected HLO parse (they are
+already per-device post-SPMD).  Single-pod numbers only, per the assignment;
+the multi-pod artifacts prove the "pod" axis lowers.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(mesh: str = "pod16x16", variant: Optional[str] = "baseline"
+                 ) -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh") != mesh:
+            continue
+        if variant is not None and rec.get("variant") != variant:
+            continue
+        out.append(rec)
+    return out
+
+
+def roofline_row(rec: Dict) -> Optional[Dict]:
+    ana = rec.get("analytic") or {}
+    if not ana or "flops" in ana.get("error", ""):
+        return None
+    chips = rec["n_devices"]
+    flops = ana["flops"]
+    flops_kernel = ana["flops_kernel"]
+    model_flops = ana["model_flops"]
+    hbm = ana["hbm_bytes"]
+    coll = rec["collectives"]["_total"]["moved_bytes"]  # per device already
+
+    t_comp = flops / (chips * PEAK_FLOPS_BF16)
+    t_comp_k = flops_kernel / (chips * PEAK_FLOPS_BF16)
+    t_mem = hbm / (chips * HBM_BW)
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "variant": rec.get("variant", "baseline"),
+        "chips": chips,
+        "compute_s": t_comp,
+        "compute_s_kernel": t_comp_k,
+        "memory_s": t_mem,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": bound,
+        "model_flops": model_flops,
+        "hlo_flops": flops,
+        "useful_ratio": model_flops / flops if flops else 0.0,
+        "mfu_upper_bound": (model_flops / (chips * PEAK_FLOPS_BF16)) / bound
+        if bound else 0.0,
+        "peak_bytes_per_dev": rec["memory"].get("peak_bytes"),
+        "fits_16g": (rec["memory"].get("peak_bytes") or 0) <= 16e9,
+    }
+
+
+def run() -> List[Dict]:
+    rows = []
+    for rec in load_records():
+        r = roofline_row(rec)
+        if r is None:
+            continue
+        rows.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}",
+            "us_per_call": round(r["bound_s"] * 1e6, 1),
+            "derived": {
+                "dominant": r["dominant"],
+                "compute_ms": round(r["compute_s"] * 1e3, 3),
+                "memory_ms": round(r["memory_s"] * 1e3, 3),
+                "collective_ms": round(r["collective_s"] * 1e3, 3),
+                "useful_ratio": round(r["useful_ratio"], 3),
+                "mfu_upper_bound": round(r["mfu_upper_bound"], 3),
+                "fits_16g": r["fits_16g"],
+            },
+        })
+    return rows
+
+
+def table(mesh: str = "pod16x16", variant: Optional[str] = "baseline"
+          ) -> List[Dict]:
+    return [r for r in (roofline_row(rec) for rec in
+                        load_records(mesh, variant)) if r]

@@ -1,0 +1,36 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import json
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import preprocessing, reward_curves, roofline, \
+        sde_dynamics
+
+    suites = [
+        ("sde_dynamics (paper Table 1)", sde_dynamics.run),
+        ("reward_curves (paper Fig 2)", reward_curves.run),
+        ("preprocessing (paper Table 2)", preprocessing.run),
+        ("roofline (deliverable g)", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for title, fn in suites:
+        try:
+            rows = fn()
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+            continue
+        for row in rows:
+            print(f"{row['name']},{row['us_per_call']},"
+                  f"\"{json.dumps(row['derived'])}\"")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Serving example: batched flow-matching sampling with interchangeable
+backbones and solvers — the inference half of the framework.
+
+Generates latents for a batch of prompt requests with (a) the paper's DiT
+and (b) an SSM backbone, under ODE and SDE solvers, and prints throughput.
+
+  PYTHONPATH=src python examples/serve_flow.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.config import FlowRLConfig
+from repro.core.preprocess import ConditionProvider
+from repro.data import synthetic_prompts
+from repro.launch.serve import FlowSampler
+
+key = jax.random.PRNGKey(0)
+provider = ConditionProvider(preprocessing=False,
+                             encoder_kw=dict(cond_dim=512, cond_len=8,
+                                             vocab=4096, hidden=256))
+prompts = synthetic_prompts(8)
+cond = provider.get(prompts)["cond"]
+
+for arch_name in ("flux_dit", "mamba2-370m"):
+    for sde in ("ode", "dance_sde"):
+        flow = FlowRLConfig(sde_type=sde, eta=0.3, num_steps=6,
+                            latent_tokens=8, latent_dim=8)
+        sampler = FlowSampler(configs.get_reduced(arch_name), flow,
+                              key=key, max_batch=4)
+        lat = sampler.serve(cond, key)           # compile
+        t0 = time.perf_counter()
+        lat = sampler.serve(cond, key)
+        jax.block_until_ready(lat)
+        dt = time.perf_counter() - t0
+        rms = float(jnp.sqrt((lat ** 2).mean()))
+        print(f"{arch_name:14s} solver={sde:10s} "
+              f"{len(prompts)/dt:6.1f} req/s  latent_rms={rms:.3f}")

@@ -1,0 +1,10 @@
+"""Flow-Factory-JAX: unified RL for flow-matching models (+ the assigned
+10-architecture backbone zoo) on multi-pod TPU meshes.
+
+NOTE: importing ``repro`` must NOT initialize jax (the dry-run sets
+XLA_FLAGS *after* package import, before first jax use) — component
+registration is therefore lazy: the registry autoloads the registering
+modules on the first lookup miss (see repro.registry)."""
+from repro import registry  # noqa: F401
+
+__version__ = "1.0.0"

@@ -1,0 +1,78 @@
+"""Pytree checkpointing: npz payload + msgpack manifest (no orbax on image).
+
+Multi-host aware: arrays are gathered to host (``jax.device_get``) before
+writing; on restore, the caller re-shards by donating the loaded tree into a
+jit'd identity with the desired shardings (see launch/train.py).  Writes are
+atomic (tmp + rename) so a preempted save never corrupts the latest step.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree) -> Tuple[list, Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat, _ = _flatten_with_paths(tree)
+    arrays = {}
+    manifest = {"step": step, "keys": [], "dtypes": {}}
+    for key, leaf in flat:
+        arr = np.asarray(jax.device_get(leaf))
+        manifest["keys"].append(key)
+        manifest["dtypes"][key] = str(arr.dtype)
+        # bf16 isn't npz-native: store as uint16 view, restore via manifest
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+        arrays[key] = arr
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = path + ".tmp.npz"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path + ".npz")
+    with open(path + ".manifest", "wb") as f:
+        f.write(msgpack.packb(manifest))
+    return path + ".npz"
+
+
+def load_checkpoint(ckpt_dir: str, step: int, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(path + ".manifest", "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    flat, treedef = _flatten_with_paths(like)
+    with np.load(path + ".npz") as z:
+        leaves = []
+        for key, leaf in flat:
+            arr = z[key]
+            want = manifest["dtypes"][key]
+            if want == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            leaves.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    return max(steps) if steps else None

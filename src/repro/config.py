@@ -1,0 +1,320 @@
+"""Typed configuration system.
+
+Everything in the framework is driven by three dataclasses:
+
+* :class:`ArchConfig` — one per backbone architecture (the 10 assigned archs +
+  the paper's own DiT family live in ``repro.configs``).
+* :class:`FlowRLConfig` — the paper's training configuration: which trainer,
+  which SDE dynamics, which rewards, preprocessing on/off.
+* :class:`RunConfig` — mesh / shapes / dtype / optimizer for a launch.
+
+Configs are plain dataclasses so they can be loaded from dicts/JSON via
+:func:`from_dict` (dacite) — the paper uses YAML; the mechanism is identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import dacite
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio", "dit")
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    # d_ff of each routed expert (dense d_ff field is used for dense layers)
+    expert_d_ff: int = 0
+    # first k layers stay dense (deepseek-v2 style)
+    first_k_dense: int = 0
+    # load-balance auxiliary loss coefficient
+    aux_loss_coef: float = 0.01
+    # router jitter / z-loss
+    router_z_coef: float = 1e-3
+    # sharding strategy: "tensor" (shard expert d_ff) | "expert" (all-to-all)
+    sharding: str = "tensor"
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 Multi-head Latent Attention."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 SSD block."""
+    d_state: int = 64
+    expand: int = 2            # d_inner = expand * d_model
+    head_dim: int = 64         # SSD head dim (n_heads = d_inner // head_dim)
+    chunk: int = 128           # chunked-scan block length
+    d_conv: int = 4            # depthwise conv width
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """Zamba2-style hybrid schedule: runs of SSM blocks with a periodically
+    applied *shared* attention block (single parameter set reused)."""
+    attn_every: int = 6        # one attn application per `attn_every` layers
+    shared_attn: bool = True   # reuse one attention block's params
+
+
+@dataclass(frozen=True)
+class FrontendConfig:
+    """Stub modality frontend (assignment carve-out): provides precomputed
+    patch/frame embeddings of the right shape; we implement the decoder."""
+    kind: str = "none"         # none | vision | audio
+    n_tokens: int = 0          # prefix length contributed by the frontend
+    embed_dim: int = 0         # embedding dim delivered (projected to d_model)
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # one of FAMILIES
+    n_layers: int
+    d_model: int
+    n_heads: int                      # 0 for attn-free (ssm)
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # sliding-window attention; 0 = full causal. Enables long_500k for dense.
+    window: int = 0
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    frontend: FrontendConfig = field(default_factory=FrontendConfig)
+    # citation of the source paper / model card for this config
+    source: str = ""
+
+    # ---- derived ----
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    def n_params(self) -> int:
+        """Total parameter count (used for MODEL_FLOPS = 6·N·D roofline)."""
+        d, v = self.d_model, self.vocab_size
+        hd = self.resolved_head_dim
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.family == "ssm":
+            per_layer = _ssm_layer_params(self)
+        elif self.family == "hybrid":
+            hy = self.hybrid or HybridConfig()
+            n_attn_sites = self.n_layers // hy.attn_every
+            attn_param_copies = 1 if hy.shared_attn else n_attn_sites
+            attn = _attn_params(self, hd)
+            total_layers = (self.n_layers * _ssm_layer_params(self)
+                            + attn_param_copies * (attn + 3 * d * self.d_ff))
+            return emb + total_layers + d  # + final norm
+        else:
+            attn = (_mla_params(self) if self.mla else _attn_params(self, hd))
+            if self.moe and self.moe.n_experts:
+                m = self.moe
+                dense_layers = m.first_k_dense
+                moe_layers = self.n_layers - dense_layers
+                router = d * m.n_experts
+                experts = (m.n_experts + m.n_shared_experts) * 3 * d * m.expert_d_ff
+                ffn_moe = router + experts
+                ffn_dense = 3 * d * self.d_ff
+                return (emb + self.n_layers * (attn + 2 * d)
+                        + moe_layers * ffn_moe + dense_layers * ffn_dense + d)
+            per_layer = attn + 3 * d * self.d_ff + 2 * d
+        return emb + self.n_layers * per_layer + d
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only top_k + shared experts)."""
+        if not (self.moe and self.moe.n_experts):
+            return self.n_params()
+        d = self.d_model
+        m = self.moe
+        hd = self.resolved_head_dim
+        attn = (_mla_params(self) if self.mla else _attn_params(self, hd))
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        moe_layers = self.n_layers - m.first_k_dense
+        active_ffn = (m.top_k + m.n_shared_experts) * 3 * d * m.expert_d_ff \
+            + d * m.n_experts
+        return (emb + self.n_layers * (attn + 2 * d)
+                + moe_layers * active_ffn
+                + m.first_k_dense * 3 * d * self.d_ff + d)
+
+
+def _attn_params(cfg: "ArchConfig", hd: int) -> int:
+    d = cfg.d_model
+    return d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d
+
+
+def _mla_params(cfg: "ArchConfig") -> int:
+    m = cfg.mla
+    d = cfg.d_model
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return (d * m.q_lora_rank + m.q_lora_rank * cfg.n_heads * qk
+            + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+            + m.kv_lora_rank * cfg.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+            + cfg.n_heads * m.v_head_dim * d)
+
+
+def _ssm_layer_params(cfg: "ArchConfig") -> int:
+    s = cfg.ssm or SSMConfig()
+    d = cfg.d_model
+    d_in = s.expand * d
+    n_heads = d_in // s.head_dim
+    # in_proj produces [z, x, B, C, dt]
+    in_proj = d * (2 * d_in + 2 * s.d_state + n_heads)
+    return in_proj + d_in * d + s.d_conv * (d_in + 2 * s.d_state) + 2 * n_heads + d
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Flow-RL (paper) config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RewardSpec:
+    """One entry of the multi-reward configuration (paper §2.3)."""
+    reward_type: str                  # registry name
+    weight: float = 1.0
+    # identifies the underlying frozen model; entries sharing model_id are
+    # deduplicated by MultiRewardLoader
+    model_id: str = ""
+    args: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class FlowRLConfig:
+    """The paper's training configuration — maps 1:1 onto its YAML schema."""
+    trainer_type: str = "flow_grpo"      # flow_grpo | mix_grpo | grpo_guard | nft | awm
+    sde_type: str = "flow_sde"           # flow_sde | dance_sde | cps | ode (Table 1)
+    eta: float = 0.7                     # noise scale of the SDE dynamics
+    num_steps: int = 10                  # denoising steps per trajectory
+    group_size: int = 8                  # G samples per prompt (GRPO grouping)
+    clip_range: float = 1e-4             # PPO clip range (log-ratio units, Flow-GRPO)
+    kl_coef: float = 0.0
+    advantage_agg: str = "weighted_sum"  # weighted_sum | gdpo
+    rewards: Tuple[RewardSpec, ...] = ()
+    # preprocessing-based memory optimization (paper §2.2)
+    preprocessing: bool = True
+    cache_dir: str = "cache"
+    # timestep sampling for NFT/AWM (solver-agnostic algorithms, paper §3.2)
+    timestep_sampling: str = "uniform"   # uniform | logit_normal | discrete
+    # MixGRPO: how many leading timesteps get SDE treatment
+    sde_window: int = 2
+    sde_window_shift_every: int = 0      # >0: slide the window during training
+    # latent geometry of the flow policy
+    latent_tokens: int = 64
+    latent_dim: int = 16
+
+
+@dataclass(frozen=True)
+class OptimConfig:
+    lr: float = 1e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    warmup_steps: int = 10
+    total_steps: int = 1000
+    grad_clip: float = 1.0
+    schedule: str = "warmup_cosine"      # warmup_cosine | constant
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    data: int = 1
+    model: int = 1
+    pods: int = 1
+
+    @property
+    def n_devices(self) -> int:
+        return self.data * self.model * self.pods
+
+
+@dataclass(frozen=True)
+class ShardingConfig:
+    # fsdp: additionally shard params over the data axis (zero-3)
+    fsdp: bool = True
+    # shard long decode KV caches over the data axis (distributed flash-decode)
+    seq_shard_decode: bool = True
+    # remat policy for train: "none" | "block" (checkpoint each layer block)
+    remat: str = "block"
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    arch: str = "smollm-360m"
+    shape: str = "train_4k"
+    mesh: MeshConfig = field(default_factory=MeshConfig)
+    sharding: ShardingConfig = field(default_factory=ShardingConfig)
+    optim: OptimConfig = field(default_factory=OptimConfig)
+    flow: FlowRLConfig = field(default_factory=FlowRLConfig)
+    param_dtype: str = "bfloat16"
+    activ_dtype: str = "bfloat16"
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Loading
+# ---------------------------------------------------------------------------
+
+_DACITE_CFG = dacite.Config(cast=[tuple], strict=True)
+
+
+def from_dict(cls: type, d: Dict[str, Any]) -> Any:
+    return dacite.from_dict(data_class=cls, data=d, config=_DACITE_CFG)
+
+
+def load_json(cls: type, path: str) -> Any:
+    with open(path) as f:
+        return from_dict(cls, json.load(f))
+
+
+def to_dict(cfg: Any) -> Dict[str, Any]:
+    return dataclasses.asdict(cfg)
+
+
+def replace(cfg: Any, **kw: Any) -> Any:
+    return dataclasses.replace(cfg, **kw)

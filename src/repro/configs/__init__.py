@@ -1,0 +1,49 @@
+"""Architecture config registry: the 10 assigned architectures plus the
+paper's own DiT family (``flux_dit``).
+
+Each module exports ``config()`` (the exact assigned full-scale config) and
+``reduced()`` (≤2 layers, d_model ≤ 512, ≤4 experts — used by CPU smoke
+tests; the full configs are exercised only via the dry-run).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.config import ArchConfig
+
+ARCH_IDS = [
+    "zamba2-2.7b",
+    "grok-1-314b",
+    "yi-34b",
+    "internvl2-1b",
+    "deepseek-v2-236b",
+    "smollm-360m",
+    "qwen3-32b",
+    "yi-9b",
+    "mamba2-370m",
+    "musicgen-large",
+]
+
+PAPER_ARCHS = ["flux_dit"]
+
+_MOD = {a: a.replace("-", "_").replace(".", "_") for a in
+        ARCH_IDS + PAPER_ARCHS}
+
+
+def _load(arch: str):
+    if arch not in _MOD:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MOD)}")
+    return importlib.import_module(f"repro.configs.{_MOD[arch]}")
+
+
+def get(arch: str) -> ArchConfig:
+    return _load(arch).config()
+
+
+def get_reduced(arch: str) -> ArchConfig:
+    return _load(arch).reduced()
+
+
+def all_archs() -> List[str]:
+    return list(ARCH_IDS)

@@ -1,0 +1,31 @@
+"""flux_dit [dit] — the paper's own model family: a FLUX.1-style rectified-flow
+DiT (Black Forest Labs) scaled to ~100M for the end-to-end RL examples.
+
+Bidirectional attention over latent tokens, adaLN-zero time/condition
+modulation; this is the backbone the paper fine-tunes with GRPO/NFT/AWM
+(paper §4 uses FLUX.1-dev at 12B — same family, full scale is exercised via
+the dry-run like every other config).  vocab_size is unused (continuous
+latents); it sizes the stub condition vocabulary."""
+from repro.config import ArchConfig
+
+
+def config() -> ArchConfig:
+    # ~12B-class full config (FLUX.1-dev-like geometry)
+    return ArchConfig(
+        name="flux_dit", family="dit",
+        n_layers=38, d_model=3072, n_heads=24, n_kv_heads=24,
+        d_ff=12288, vocab_size=32768, head_dim=128,
+        qk_norm=True, window=0,
+        source="bfl.ai FLUX.1-dev (paper §4)",
+    )
+
+
+def reduced() -> ArchConfig:
+    # ~100M driver model used by examples/train_grpo_e2e.py
+    return ArchConfig(
+        name="flux_dit-reduced", family="dit",
+        n_layers=2, d_model=256, n_heads=8, n_kv_heads=8,
+        d_ff=1024, vocab_size=512, head_dim=32,
+        qk_norm=True, window=0,
+        source="bfl.ai FLUX.1-dev (paper §4)",
+    )

@@ -1,0 +1,27 @@
+"""mamba2-370m [ssm] — SSD (state-space duality) [arXiv:2405.21060].
+
+Attention-free: n_heads/n_kv_heads/d_ff are 0 per the assignment; sequence
+mixing is the chunked SSD scan, decode state is O(1) in context length (this
+arch runs long_500k natively)."""
+from repro.config import ArchConfig, SSMConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="mamba2-370m", family="ssm",
+        n_layers=48, d_model=1024, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab_size=50280,
+        ssm=SSMConfig(d_state=128, expand=2, head_dim=64, chunk=128,
+                      d_conv=4),
+        source="arXiv:2405.21060",
+    )
+
+
+def reduced() -> ArchConfig:
+    return ArchConfig(
+        name="mamba2-370m-reduced", family="ssm",
+        n_layers=2, d_model=256, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab_size=512,
+        ssm=SSMConfig(d_state=32, expand=2, head_dim=32, chunk=32, d_conv=4),
+        source="arXiv:2405.21060",
+    )

@@ -1,0 +1,12 @@
+# The paper's primary contribution: registry-decoupled RL training for
+# flow-matching models — schedulers (Table 1), trainers (§3), multi-reward
+# system (§2.3), preprocessing-based memory optimization (§2.2).
+from repro.core import schedulers, rollout, preprocess
+from repro.core.rewards import MultiRewardLoader
+from repro.core.trainers import (AWMTrainer, BaseTrainer, DiffusionNFTTrainer,
+                                 FlowGRPOTrainer, GRPOGuardTrainer,
+                                 MixGRPOTrainer, RLState)
+
+__all__ = ["schedulers", "rollout", "preprocess", "MultiRewardLoader",
+           "BaseTrainer", "RLState", "FlowGRPOTrainer", "MixGRPOTrainer",
+           "GRPOGuardTrainer", "DiffusionNFTTrainer", "AWMTrainer"]

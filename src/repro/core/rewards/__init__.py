@@ -1,0 +1,8 @@
+from repro.core.rewards.base import (BaseRewardModel, GroupwiseRewardModel,
+                                     PointwiseRewardModel)
+from repro.core.rewards.loader import MultiRewardLoader
+from repro.core.rewards.aggregate import compute_advantages, group_normalize
+from repro.core.rewards import models  # noqa: F401  (registers rewards)
+
+__all__ = ["BaseRewardModel", "PointwiseRewardModel", "GroupwiseRewardModel",
+           "MultiRewardLoader", "compute_advantages", "group_normalize"]

@@ -1,0 +1,57 @@
+"""Advantage aggregation strategies (paper §2.3 mechanism 3).
+
+Given per-reward raw scores {name: (B,)} for grouped samples (B = P·G with
+G consecutive samples per prompt), produce per-sample advantages (B,).
+
+* ``weighted_sum`` — combine first, normalize after:
+      A = groupnorm(Σᵢ wᵢ·rᵢ)
+* ``gdpo`` — GDPO-style (Liu et al., 2026) per-reward decoupled
+  normalization: normalize each reward within its group first, then combine:
+      A = Σᵢ wᵢ·groupnorm(rᵢ)
+  This prevents a high-variance reward from drowning out the others.
+
+New strategies plug in via ``@registry.register("aggregator", name)`` — the
+paper's "implementing new aggregation strategies only requires a new
+compute_advantages method".
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro import registry
+
+F32 = jnp.float32
+
+
+def group_normalize(r: jax.Array, group_size: int, eps: float = 1e-6
+                    ) -> jax.Array:
+    """(B,) -> (B,): subtract group mean, divide by group std (GRPO)."""
+    B = r.shape[0]
+    g = r.astype(F32).reshape(B // group_size, group_size)
+    mu = g.mean(axis=1, keepdims=True)
+    sd = g.std(axis=1, keepdims=True)
+    return ((g - mu) / (sd + eps)).reshape(B)
+
+
+@registry.register("aggregator", "weighted_sum")
+def weighted_sum(rewards: Dict[str, jax.Array], weights: Dict[str, float],
+                 group_size: int) -> jax.Array:
+    total = sum(weights[k] * rewards[k].astype(F32) for k in rewards)
+    return group_normalize(total, group_size)
+
+
+@registry.register("aggregator", "gdpo")
+def gdpo(rewards: Dict[str, jax.Array], weights: Dict[str, float],
+         group_size: int) -> jax.Array:
+    return sum(weights[k] * group_normalize(rewards[k], group_size)
+               for k in rewards)
+
+
+def compute_advantages(strategy: str, rewards: Dict[str, jax.Array],
+                       weights: Dict[str, float], group_size: int
+                       ) -> jax.Array:
+    return registry.build("aggregator", strategy, rewards, weights,
+                          group_size)

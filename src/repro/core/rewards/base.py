@@ -1,0 +1,63 @@
+"""Reward-model interfaces (paper §2.3).
+
+Two unified interfaces:
+
+* :class:`PointwiseRewardModel` — ``score(x) → R`` per sample.
+* :class:`GroupwiseRewardModel` — ``rank(x₁..x_k) → R^k`` relative scores
+  within a GRPO group (Pref-GRPO-style pairwise preference rewards).
+
+Every model declares ``model_id`` — the identity of the underlying frozen
+network.  :class:`~repro.core.rewards.loader.MultiRewardLoader` deduplicates
+on it, so N reward configs referencing one backbone load it once.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class BaseRewardModel:
+    """Common base. ``x0`` is the final latent (B, Lt, ld); ``cond_meta``
+    carries condition embeddings / prompt hashes from preprocessing."""
+
+    kind: str = "pointwise"
+
+    def __init__(self, model_id: str = ""):
+        self.model_id = model_id or type(self).__name__
+
+    def load_params(self, key: jax.Array) -> Any:
+        """Instantiate the frozen scorer's parameters (called once per unique
+        model_id by the loader)."""
+        return None
+
+    def set_params(self, params: Any) -> None:
+        self.params = params
+
+
+class PointwiseRewardModel(BaseRewardModel):
+    kind = "pointwise"
+
+    def score(self, x0: jax.Array, cond_meta: Dict[str, jax.Array]
+              ) -> jax.Array:
+        """x0: (B, Lt, ld) -> rewards (B,)."""
+        raise NotImplementedError
+
+
+class GroupwiseRewardModel(BaseRewardModel):
+    kind = "groupwise"
+
+    def rank(self, x0_groups: jax.Array, cond_meta: Dict[str, jax.Array]
+             ) -> jax.Array:
+        """x0_groups: (P, G, Lt, ld) -> relative scores (P, G)."""
+        raise NotImplementedError
+
+    def score(self, x0: jax.Array, cond_meta: Dict[str, jax.Array], *,
+              group_size: int) -> jax.Array:
+        """Flatten-compatible wrapper: reshapes (P·G, ...) into groups,
+        ranks, and flattens back to (P·G,)."""
+        B = x0.shape[0]
+        P = B // group_size
+        groups = x0.reshape((P, group_size) + x0.shape[1:])
+        return self.rank(groups, cond_meta).reshape(B)

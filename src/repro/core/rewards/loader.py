@@ -1,0 +1,59 @@
+"""MultiRewardLoader — multi-reward training with automatic deduplication
+(paper §2.3 mechanism 2).
+
+Multiple :class:`RewardSpec` entries may reference the same frozen backbone
+(``model_id``); the loader instantiates each unique backbone exactly once and
+shares its parameters across every reward that references it.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+
+from repro import registry
+from repro.config import RewardSpec
+from repro.core.rewards.base import BaseRewardModel
+
+
+class MultiRewardLoader:
+    def __init__(self, specs: Sequence[RewardSpec], key: jax.Array):
+        self.specs = tuple(specs)
+        self.models: List[BaseRewardModel] = []
+        self.weights: List[float] = []
+        self._param_store: Dict[str, object] = {}
+        self.unique_loads = 0
+
+        for i, spec in enumerate(self.specs):
+            kwargs = dict(spec.args)
+            if spec.model_id:
+                kwargs["model_id"] = spec.model_id
+            model: BaseRewardModel = registry.build(
+                "reward", spec.reward_type, **kwargs)
+            if model.model_id not in self._param_store:
+                self._param_store[model.model_id] = model.load_params(
+                    jax.random.fold_in(key, i))
+                self.unique_loads += 1
+            model.set_params(self._param_store[model.model_id])
+            self.models.append(model)
+            self.weights.append(spec.weight)
+
+    def __len__(self) -> int:
+        return len(self.models)
+
+    def compute_all(self, x0: jax.Array, cond_meta: Dict, *,
+                    group_size: int) -> Dict[str, jax.Array]:
+        """Returns {reward_name: (B,) raw rewards} for every configured
+        reward (groupwise models are evaluated within GRPO groups)."""
+        out = {}
+        for i, (spec, model) in enumerate(zip(self.specs, self.models)):
+            name = f"{spec.reward_type}:{i}"
+            if model.kind == "groupwise":
+                out[name] = model.score(x0, cond_meta, group_size=group_size)
+            else:
+                out[name] = model.score(x0, cond_meta)
+        return out
+
+    def weight_map(self) -> Dict[str, float]:
+        return {f"{s.reward_type}:{i}": s.weight
+                for i, s in enumerate(self.specs)}

@@ -1,0 +1,137 @@
+"""Concrete reward models.
+
+The paper evaluates with PickScore and Text-Rendering rewards; shipping those
+checkpoints is out of scope (DESIGN.md §8), so each is reproduced as a frozen
+*synthetic* scorer with the same interface, determinism and cost profile:
+
+* ``pickscore`` — frozen 2-layer MLP preference scorer over (pooled latent,
+  pooled condition) — the shape of a CLIP-style preference model.
+* ``text_render`` — similarity of the decoded latent to a prompt-derived
+  target pattern (the "did the text get rendered" signal).
+* ``latent_norm`` — regularity penalty keeping latents on-distribution.
+* ``pref_group`` — groupwise pairwise-preference reward (Pref-GRPO): within a
+  GRPO group, win-rate under the frozen scorer, group-normalized.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro import registry
+from repro.core.rewards.base import GroupwiseRewardModel, PointwiseRewardModel
+
+F32 = jnp.float32
+
+
+def _pool(x0: jax.Array) -> jax.Array:
+    return x0.astype(F32).mean(axis=1)               # (B, ld)
+
+
+@registry.register("reward", "pickscore")
+class PickScoreStub(PointwiseRewardModel):
+    """Frozen MLP preference scorer (PickScore, Kirstain et al., 2023)."""
+
+    def __init__(self, model_id: str = "pickscore-base", latent_dim: int = 16,
+                 cond_dim: int = 512, hidden: int = 256, seed: int = 7):
+        super().__init__(model_id)
+        self.latent_dim, self.cond_dim = latent_dim, cond_dim
+        self.hidden, self.seed = hidden, seed
+
+    def load_params(self, key: jax.Array) -> Any:
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(self.seed), 3)
+        d_in = self.latent_dim + self.cond_dim
+        return {
+            "w1": jax.random.normal(k1, (d_in, self.hidden), F32)
+            / jnp.sqrt(d_in),
+            "w2": jax.random.normal(k2, (self.hidden, self.hidden), F32)
+            / jnp.sqrt(self.hidden),
+            "w3": jax.random.normal(k3, (self.hidden, 1), F32)
+            / jnp.sqrt(self.hidden),
+        }
+
+    def score(self, x0, cond_meta):
+        pooled_c = cond_meta["cond"].astype(F32).mean(axis=1)  # (B, cond_dim)
+        h = jnp.concatenate([_pool(x0), pooled_c], axis=-1)
+        p = self.params
+        h = jnp.tanh(h @ p["w1"])
+        h = jnp.tanh(h @ p["w2"])
+        return (h @ p["w3"])[:, 0]
+
+
+@registry.register("reward", "text_render")
+class TextRenderReward(PointwiseRewardModel):
+    """Prompt-conditioned target-pattern similarity (Text-Rendering proxy).
+
+    The target pattern is a deterministic projection of the condition
+    embedding into latent space — 'rendering the text' means steering the
+    latent toward it; cosine similarity is the reward."""
+
+    def __init__(self, model_id: str = "text-render", latent_dim: int = 16,
+                 latent_tokens: int = 64, cond_dim: int = 512, seed: int = 11):
+        super().__init__(model_id)
+        self.latent_dim, self.latent_tokens = latent_dim, latent_tokens
+        self.cond_dim, self.seed = cond_dim, seed
+
+    def load_params(self, key: jax.Array) -> Any:
+        k = jax.random.PRNGKey(self.seed)
+        return {"proj": jax.random.normal(
+            k, (self.cond_dim, self.latent_tokens * self.latent_dim), F32)
+            / jnp.sqrt(self.cond_dim)}
+
+    def score(self, x0, cond_meta):
+        B = x0.shape[0]
+        pooled_c = cond_meta["cond"].astype(F32).mean(axis=1)
+        target = (pooled_c @ self.params["proj"]).reshape(x0.shape)
+        a = x0.astype(F32).reshape(B, -1)
+        b = target.reshape(B, -1)
+        return jnp.sum(a * b, -1) / (
+            jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1) + 1e-8)
+
+
+@registry.register("reward", "latent_norm")
+class LatentNormPenalty(PointwiseRewardModel):
+    """−(‖x₀‖_rms − 1)²: keeps latents on the unit-variance manifold the VAE
+    decoder expects (reward-hacking guard used alongside main rewards)."""
+
+    def __init__(self, model_id: str = "latent-norm"):
+        super().__init__(model_id)
+
+    def score(self, x0, cond_meta):
+        rms = jnp.sqrt((x0.astype(F32) ** 2).mean(axis=(1, 2)))
+        return -(rms - 1.0) ** 2
+
+
+@registry.register("reward", "pref_group")
+class PrefGroupReward(GroupwiseRewardModel):
+    """Pairwise-preference groupwise reward (Pref-GRPO, Wang et al., 2025b).
+
+    Each pair (i, j) in a group is compared by a frozen scorer; the reward of
+    sample i is its win-rate.  Shares the PickScore backbone by default —
+    exercising the loader's deduplication."""
+
+    def __init__(self, model_id: str = "pickscore-base", latent_dim: int = 16,
+                 cond_dim: int = 512, hidden: int = 256, seed: int = 7,
+                 temperature: float = 10.0):
+        super().__init__(model_id)
+        self._scorer = PickScoreStub(model_id, latent_dim, cond_dim, hidden,
+                                     seed)
+        self.temperature = temperature
+
+    def load_params(self, key: jax.Array) -> Any:
+        return self._scorer.load_params(key)
+
+    def set_params(self, params: Any) -> None:
+        self.params = params
+        self._scorer.set_params(params)
+
+    def rank(self, x0_groups, cond_meta):
+        P, G = x0_groups.shape[:2]
+        flat = x0_groups.reshape((P * G,) + x0_groups.shape[2:])
+        s = self._scorer.score(flat, cond_meta).reshape(P, G)
+        # soft win-rate: mean over opponents of sigmoid(τ·(s_i − s_j))
+        diff = s[:, :, None] - s[:, None, :]                  # (P, G, G)
+        win = jax.nn.sigmoid(self.temperature * diff)
+        mask = 1.0 - jnp.eye(G)[None]
+        return (win * mask).sum(-1) / jnp.maximum(G - 1, 1)

@@ -1,0 +1,72 @@
+"""Trajectory sampling for RL fine-tuning (the paper's sampling phase).
+
+Produces grouped trajectories (G samples per prompt — the GRPO group) with
+per-step transition log-probabilities, via ``lax.scan`` over denoising steps.
+Supports full-SDE (Flow-GRPO), mixed ODE/SDE (MixGRPO — only a window of
+timesteps is stochastic) and pure-ODE (NFT/AWM) rollouts through the same
+code path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedulers import SDESchedulerMixin
+from repro.models.flow import FlowAdapter
+
+F32 = jnp.float32
+
+
+class Trajectory(NamedTuple):
+    xs: jax.Array        # (T+1, B, Lt, ld)  states (xs[0] = noise)
+    logps: jax.Array     # (T, B)            transition log-probs (0 on ODE steps)
+    ts: jax.Array        # (T+1,)            descending time grid
+    sde_mask: jax.Array  # (T,) bool         which steps were stochastic
+    cond: jax.Array      # (B, Lc, cond_dim) condition embeddings
+
+    @property
+    def x0(self) -> jax.Array:
+        return self.xs[-1]
+
+
+def rollout(adapter: FlowAdapter, params, cond: jax.Array, key: jax.Array,
+            scheduler: SDESchedulerMixin, num_steps: int,
+            sde_mask: Optional[jax.Array] = None) -> Trajectory:
+    """cond: (B, Lc, cond_dim) — already group-repeated by the caller."""
+    B = cond.shape[0]
+    ts = scheduler.timesteps(num_steps)
+    if sde_mask is None:
+        sde_mask = jnp.ones((num_steps,), bool)
+
+    k_init, k_steps = jax.random.split(key)
+    x_init = adapter.init_latent(k_init, B)
+
+    def body(x, inp):
+        t, t_next, is_sde, k = inp
+        tb = jnp.full((B,), t, F32)
+        v = adapter.velocity(params, x, tb, cond)
+        x_sde, logp = scheduler.step(v, x, t, t_next, k)
+        x_ode = scheduler.step_ode(v, x, t, t_next)
+        x_next = jnp.where(is_sde, x_sde, x_ode)
+        logp = jnp.where(is_sde, logp, jnp.zeros_like(logp))
+        return x_next, (x_next, logp)
+
+    keys = jax.random.split(k_steps, num_steps)
+    _, (xs_tail, logps) = jax.lax.scan(
+        body, x_init, (ts[:-1], ts[1:], sde_mask, keys))
+    xs = jnp.concatenate([x_init[None], xs_tail], axis=0)
+    return Trajectory(xs=xs, logps=logps, ts=ts, sde_mask=sde_mask, cond=cond)
+
+
+def group_repeat(cond: jax.Array, group_size: int) -> jax.Array:
+    """(P, Lc, D) prompts -> (P·G, Lc, D) with each prompt repeated G times
+    (consecutive — group g of prompt p occupies rows p·G..p·G+G−1)."""
+    return jnp.repeat(cond, group_size, axis=0)
+
+
+def mix_sde_mask(num_steps: int, window: int, shift: int = 0) -> jnp.ndarray:
+    """MixGRPO: SDE on a sliding window of timesteps, ODE elsewhere."""
+    idx = (jnp.arange(num_steps) - shift) % num_steps
+    return idx < window

@@ -1,0 +1,9 @@
+from repro.core.trainers.base import BaseTrainer, RLState
+from repro.core.trainers.grpo import FlowGRPOTrainer
+from repro.core.trainers.mix_grpo import MixGRPOTrainer
+from repro.core.trainers.grpo_guard import GRPOGuardTrainer
+from repro.core.trainers.nft import DiffusionNFTTrainer
+from repro.core.trainers.awm import AWMTrainer
+
+__all__ = ["BaseTrainer", "RLState", "FlowGRPOTrainer", "MixGRPOTrainer",
+           "GRPOGuardTrainer", "DiffusionNFTTrainer", "AWMTrainer"]

@@ -1,0 +1,49 @@
+"""Advantage Weighted Matching (Xue et al., 2025a) — aligns RL with the
+pretraining objective by weighting the standard velocity-matching loss with
+per-sample advantages (paper Eq. 3):
+
+    L = E[ A(x₀) · ‖v_θ(x_t, t) − (ε − x₀)‖² ]
+
+Solver-agnostic: trajectories come from any ODE solver; the loss touches only
+the forward process.  Advantages are clipped to a bounded range for
+stability (negative advantages *increase* velocity error on bad samples,
+which is the policy-gradient-aligned direction but diverges if unbounded).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import registry
+from repro.core.rollout import Trajectory
+from repro.core.trainers.base import BaseTrainer
+
+F32 = jnp.float32
+
+
+@registry.register("trainer", "awm")
+class AWMTrainer(BaseTrainer):
+    rollout_sde = False           # ODE rollouts
+
+    adv_clip: float = 3.0
+
+    def loss_fn(self, params, traj: Trajectory, adv: jax.Array,
+                key: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        x0 = traj.x0
+        cond = traj.cond
+        B = x0.shape[0]
+        k_t, k_eps = jax.random.split(key)
+        t = self.sample_timesteps(k_t, B)
+        eps = jax.random.normal(k_eps, x0.shape, F32)
+        x_t = (1.0 - t)[:, None, None] * x0 + t[:, None, None] * eps
+        target = eps - x0
+
+        v = self.velocity(params, x_t, t, cond)
+        se = ((v - target) ** 2).mean(axis=(1, 2))          # (B,)
+        a = jnp.clip(adv, -self.adv_clip, self.adv_clip)
+        loss = (a * se).mean()
+        aux = {"vel_err": jnp.sqrt(se.mean()), "adv_clip_frac":
+               (jnp.abs(adv) > self.adv_clip).astype(F32).mean()}
+        return loss, aux

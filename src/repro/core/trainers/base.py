@@ -1,0 +1,137 @@
+"""BaseTrainer — the paper's algorithm-logic component type.
+
+Owns: sampling (rollout), reward computation (MultiRewardLoader), advantage
+aggregation, and the optimization step.  Subclasses implement ``loss_fn``
+(and may override ``sde_mask`` / ``wants_sde``); everything else — including
+distribution, preprocessing and multi-reward handling — is shared, which is
+exactly the O(M+N) decoupling the paper claims.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim, registry
+from repro.config import ArchConfig, FlowRLConfig, OptimConfig, RewardSpec
+from repro.core import schedulers
+from repro.core.rewards import MultiRewardLoader, compute_advantages
+from repro.core.rollout import Trajectory, group_repeat, rollout
+from repro.models import params as params_lib
+from repro.models.flow import FlowAdapter
+
+F32 = jnp.float32
+
+# default reward is shape-agnostic (works for any latent geometry)
+DEFAULT_REWARDS = (RewardSpec(reward_type="latent_norm", weight=1.0),)
+
+
+class RLState(NamedTuple):
+    params: Any
+    opt: optim.AdamWState
+
+
+class BaseTrainer:
+    """Subclass contract: implement ``loss_fn(params, traj, adv, key)``."""
+
+    #: scheduler used for rollouts; GRPO variants need an SDE, NFT/AWM
+    #: override to force ODE sampling (solver-agnostic algorithms)
+    rollout_sde: bool = True
+
+    def __init__(self, arch_cfg: ArchConfig, flow_cfg: FlowRLConfig,
+                 opt_cfg: OptimConfig, *, key: jax.Array,
+                 cond_dim: int = 512, dtype=jnp.bfloat16):
+        self.cfg = arch_cfg
+        self.flow = flow_cfg
+        self.opt_cfg = opt_cfg
+        self.adapter = FlowAdapter(arch_cfg, flow_cfg, cond_dim)
+        sde_type = flow_cfg.sde_type if self.rollout_sde else "ode"
+        self.scheduler = schedulers.build(sde_type, flow_cfg.eta)
+        k_p, k_r = jax.random.split(key)
+        params = params_lib.init(self.adapter.spec(), k_p, dtype)
+        self.state = RLState(params, optim.adamw_init(params))
+        specs = flow_cfg.rewards or DEFAULT_REWARDS
+        self.loader = MultiRewardLoader(specs, k_r)
+        self._lr = optim.make_schedule(opt_cfg)
+        self._sample_jit = jax.jit(self._sample)
+        self._update_jit = jax.jit(self._update)
+        self._rewards_jit = jax.jit(functools.partial(
+            self._rewards, group_size=flow_cfg.group_size))
+
+    # ------------------------------------------------------------- sampling
+    def sde_mask(self, it: int) -> Optional[jnp.ndarray]:
+        return None  # default: all steps stochastic (or all ODE)
+
+    def _sample(self, params, cond: jax.Array, key: jax.Array,
+                sde_mask) -> Trajectory:
+        return rollout(self.adapter, params, cond, key, self.scheduler,
+                       self.flow.num_steps, sde_mask)
+
+    def sample(self, params, cond: jax.Array, key: jax.Array, it: int = 0
+               ) -> Trajectory:
+        """cond: (P, Lc, D) prompt embeddings -> grouped trajectories."""
+        cond_g = group_repeat(cond, self.flow.group_size)
+        return self._sample_jit(params, cond_g, key, self.sde_mask(it))
+
+    # -------------------------------------------------------------- rewards
+    def _rewards(self, x0: jax.Array, cond_meta: Dict, *, group_size: int
+                 ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+        rew = self.loader.compute_all(x0, cond_meta, group_size=group_size)
+        adv = compute_advantages(self.flow.advantage_agg, rew,
+                                 self.loader.weight_map(), group_size)
+        return rew, adv
+
+    # --------------------------------------------------------------- update
+    def loss_fn(self, params, traj: Trajectory, adv: jax.Array,
+                key: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        raise NotImplementedError
+
+    def _update(self, state: RLState, traj: Trajectory, adv: jax.Array,
+                key: jax.Array) -> Tuple[RLState, Dict[str, jax.Array]]:
+        (loss, aux), grads = jax.value_and_grad(
+            self.loss_fn, has_aux=True)(state.params, traj, adv, key)
+        grads, gnorm = optim.clip_by_global_norm(grads,
+                                                 self.opt_cfg.grad_clip)
+        lr = self._lr(state.opt.step)
+        new_p, new_opt = optim.adamw_update(state.params, grads, state.opt,
+                                            self.opt_cfg, lr)
+        aux = dict(aux)
+        aux.update(loss=loss, grad_norm=gnorm, lr=lr)
+        return RLState(new_p, new_opt), aux
+
+    # ------------------------------------------------------------ iteration
+    def step(self, cond: jax.Array, key: jax.Array, it: int = 0
+             ) -> Dict[str, jax.Array]:
+        """One full RL iteration: rollout -> rewards -> advantages -> update.
+
+        cond: (P, Lc, cond_dim) prompt embeddings (from the preprocessing
+        cache or a live encoder — the trainer doesn't know which: §2.2)."""
+        k_s, k_u = jax.random.split(jax.random.fold_in(key, it))
+        traj = self.sample(self.state.params, cond, k_s, it)
+        cond_meta = {"cond": traj.cond}
+        rewards, adv = self._rewards_jit(traj.x0, cond_meta)
+        self.state, metrics = self._update_jit(self.state, traj, adv, k_u)
+        metrics["reward_mean"] = sum(r.mean() for r in rewards.values())
+        for name, r in rewards.items():
+            metrics[f"reward/{name}"] = r.mean()
+        return metrics
+
+    # ------------------------------------------------------------- helpers
+    def velocity(self, params, x, t, cond):
+        return self.adapter.velocity(params, x, t, cond)
+
+    def sample_timesteps(self, key: jax.Array, batch: int) -> jax.Array:
+        """Timestep sampling strategies for the solver-agnostic algorithms
+        (paper §3.2): uniform | logit_normal | discrete."""
+        how = self.flow.timestep_sampling
+        if how == "uniform":
+            return jax.random.uniform(key, (batch,), F32, 0.02, 0.98)
+        if how == "logit_normal":
+            return jax.nn.sigmoid(jax.random.normal(key, (batch,), F32))
+        if how == "discrete":
+            grid = self.scheduler.timesteps(self.flow.num_steps)[:-1]
+            idx = jax.random.randint(key, (batch,), 0, grid.shape[0])
+            return grid[idx]
+        raise ValueError(f"unknown timestep_sampling {how!r}")

@@ -1,0 +1,32 @@
+"""GRPO-Guard (Wang et al., 2025a) — mitigates the *negatively-biased ratio
+distribution* of flow-SDE formulations.
+
+The SDE transition variance is timestep-dependent, so the importance ratio
+ρ = exp(logp_new − logp_old) is systematically biased low at high-noise
+timesteps; naive clipping then asymmetrically suppresses positive updates
+(implicit over-optimization / reward hacking).  GRPO-Guard applies
+**RatioNorm** — recentring each timestep's ratio distribution by its batch
+mean (stop-gradient) — plus the standard regulated clip, so every timestep
+contributes an unbiased, comparable gradient.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import registry
+from repro.core.trainers.grpo import FlowGRPOTrainer
+
+F32 = jnp.float32
+
+
+@registry.register("trainer", "grpo_guard")
+class GRPOGuardTrainer(FlowGRPOTrainer):
+    rollout_sde = True
+
+    def ratio_transform(self, ratio: jax.Array, t_index: jax.Array,
+                        is_sde: jax.Array) -> jax.Array:
+        # RatioNorm: divide by the batch-mean ratio at this timestep.
+        # stop_gradient: the correction is a statistic, not a policy term.
+        mean = jax.lax.stop_gradient(ratio.mean())
+        return ratio / jnp.maximum(mean, 1e-6)

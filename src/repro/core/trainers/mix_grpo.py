@@ -1,0 +1,25 @@
+"""MixGRPO (Li et al., 2025) — *Flow-GRPO-Fast*: SDE on only a small window
+of timesteps (1–2 by default), ODE everywhere else.  Cuts both the sampling
+noise-injection cost and, more importantly, the training cost: the policy
+gradient only needs velocity recomputation at the SDE steps.  The window can
+slide over training (``sde_window_shift_every``) so all timesteps eventually
+receive gradient signal.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro import registry
+from repro.core.rollout import mix_sde_mask
+from repro.core.trainers.grpo import FlowGRPOTrainer
+
+
+@registry.register("trainer", "mix_grpo")
+class MixGRPOTrainer(FlowGRPOTrainer):
+    rollout_sde = True
+
+    def sde_mask(self, it: int) -> jnp.ndarray:
+        shift = 0
+        if self.flow.sde_window_shift_every:
+            shift = it // self.flow.sde_window_shift_every
+        return mix_sde_mask(self.flow.num_steps, self.flow.sde_window, shift)

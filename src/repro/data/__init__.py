@@ -1,0 +1,4 @@
+from repro.data.prompts import PromptDataset, synthetic_prompts
+from repro.data.tokens import TokenStream
+
+__all__ = ["PromptDataset", "synthetic_prompts", "TokenStream"]

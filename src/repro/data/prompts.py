@@ -1,0 +1,54 @@
+"""Prompt dataset for RL fine-tuning (the paper trains on text prompts).
+
+``synthetic_prompts`` generates a deterministic compositional prompt corpus
+(the Pick-a-Pic/OCR-style distribution stand-in); ``PromptDataset`` provides
+shuffled epoch iteration with per-host sharding for multi-process launches.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Iterator, List, Sequence
+
+import numpy as np
+
+_SUBJECTS = ["a fox", "an astronaut", "a teapot", "two dancers", "a robot",
+             "a lighthouse", "an origami crane", "a neon sign", "a tram",
+             "a violin"]
+_STYLES = ["in watercolor", "as pixel art", "in film noir lighting",
+           "as a blueprint", "in ukiyo-e style", "as claymation",
+           "in double exposure", "as stained glass"]
+_TEXTS = ["with the word 'flow' painted on it", "holding a sign saying 'RL'",
+          "next to graffiti reading 'factory'", "at golden hour",
+          "under a thunderstorm", ""]
+
+
+def synthetic_prompts(n: int, seed: int = 0) -> List[str]:
+    rng = np.random.RandomState(seed)
+    combos = list(itertools.product(_SUBJECTS, _STYLES, _TEXTS))
+    idx = rng.permutation(len(combos))
+    out = []
+    for i in range(n):
+        s, st, tx = combos[idx[i % len(combos)]]
+        out.append(" ".join(w for w in (s, st, tx) if w))
+    return out
+
+
+class PromptDataset:
+    def __init__(self, prompts: Sequence[str], batch_size: int, *,
+                 seed: int = 0, host_id: int = 0, n_hosts: int = 1):
+        self.prompts = list(prompts)[host_id::n_hosts]
+        self.batch_size = batch_size
+        self.seed = seed
+
+    def __len__(self) -> int:
+        return len(self.prompts)
+
+    def epoch(self, epoch_idx: int) -> Iterator[List[str]]:
+        rng = np.random.RandomState(self.seed + epoch_idx)
+        order = rng.permutation(len(self.prompts))
+        for i in range(0, len(order) - self.batch_size + 1, self.batch_size):
+            yield [self.prompts[j] for j in order[i:i + self.batch_size]]
+
+    def infinite(self) -> Iterator[List[str]]:
+        for e in itertools.count():
+            yield from self.epoch(e)

@@ -1,0 +1,77 @@
+"""Kernel dispatch layer.
+
+The model/trainer code calls these wrappers; they route to the Pallas kernel
+on TPU (or in interpret mode when REPRO_PALLAS=interpret — the CPU CI
+configuration) and to the pure-jnp reference otherwise.  This keeps the
+XLA-path HLO (what the CPU dry-run lowers) and the kernel path behaviourally
+identical — the tests assert exactly that.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.grpo_loss import grpo_loss as _grpo
+from repro.kernels.sde_step import sde_step as _sde
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_PALLAS", "auto")
+    if env in ("interpret", "off", "on"):
+        return env
+    return "on" if jax.default_backend() == "tpu" else "off"
+
+
+def pallas_enabled() -> bool:
+    return _mode() in ("on", "interpret")
+
+
+def _interpret() -> bool:
+    return _mode() == "interpret"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0):
+    if pallas_enabled():
+        return _flash(q, k, v, causal=causal, window=window,
+                      interpret=_interpret())
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def ssd_scan(x, dt, a, bm, cm, *, chunk=128):
+    if pallas_enabled():
+        return _ssd(x, dt, a, bm, cm, chunk=chunk, interpret=_interpret())
+    return ref.ssd_scan_ref(x, dt, a, bm, cm)
+
+
+def sde_step(v, x, eps, t, t_next, *, eta=0.7):
+    if pallas_enabled():
+        return _sde(v, x, eps, t, t_next, eta=eta, interpret=_interpret())
+    return ref.sde_step_ref(v, x, t, t_next, eps, eta=eta)
+
+
+def grpo_loss(logp_new, logp_old, adv, ratio_mean=None, *, clip=0.2,
+              guard=False):
+    if pallas_enabled():
+        return _grpo(logp_new, logp_old, adv, ratio_mean, clip=clip,
+                     guard=guard, interpret=_interpret())
+    return ref.grpo_loss_ref(logp_new, logp_old, adv, clip=clip, guard=guard)
+
+
+def grpo_loss_trainable(logp_new, logp_old, adv, *, clip=0.2):
+    """Differentiable GRPO loss for the trainer: fused-kernel forward with
+    the closed-form PPO-clip VJP (see kernels/grpo_loss.py); clip-fraction
+    metric computed alongside (non-differentiated)."""
+    if pallas_enabled():
+        from repro.kernels.grpo_loss import grpo_loss_diff
+        loss = grpo_loss_diff(logp_new, logp_old, adv, clip, _interpret())
+        ratio = jnp.exp(jnp.clip(jax.lax.stop_gradient(logp_new - logp_old),
+                                 -20.0, 20.0))
+        frac = (jnp.abs(ratio - 1.0) > clip).astype(jnp.float32)
+        return loss, frac
+    return ref.grpo_loss_ref(logp_new, logp_old, adv, clip=clip, guard=False)

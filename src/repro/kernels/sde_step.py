@@ -1,0 +1,83 @@
+"""Fused Flow-SDE sampling step (paper Eq. 1) — Pallas kernel (TPU target).
+
+The RL sampling loop applies this elementwise update T times per trajectory;
+it is bandwidth-bound (5 streams: v, x, ε in; x_next, logp out), so fusing
+drift + noise injection + Gaussian log-density + the per-sample reduction
+into one VMEM pass removes three HBM round-trips vs. the unfused XLA graph.
+
+Grid: one program per batch row; block = the full flattened latent (Lt·ld ≈
+16 K floats ≈ 64 KB — VMEM-trivial).  The log-prob reduction happens in-
+register before the single (B,) output write.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+LOG2PI = 1.8378770664093453
+
+
+def _sde_kernel(v_ref, x_ref, eps_ref, t_ref, tn_ref, xn_ref, lp_ref, *,
+                eta: float):
+    t = t_ref[0]
+    t_next = tn_ref[0]
+    # σ argument clamped (FlowSDEScheduler.t_sigma_max); drift uses raw t —
+    # identical numerics to the jnp scheduler path (asserted in tests)
+    tc = jnp.clip(t, 1e-4, 0.96)
+    sigma2 = eta * eta * tc / (1.0 - tc)
+    sigma = jnp.sqrt(sigma2)
+    delta = t - t_next
+    std = sigma * jnp.sqrt(delta)
+
+    v = v_ref[...].astype(F32)
+    x = x_ref[...].astype(F32)
+    eps = eps_ref[...].astype(F32)
+
+    drift = v + (sigma2 / (2.0 * t)) * (x + (1.0 - t) * v)
+    mean = x - drift * delta
+    x_next = mean + std * eps
+    xn_ref[...] = x_next.astype(xn_ref.dtype)
+    # z = (x_next-mean)/std = eps exactly -> fused logpdf
+    lp = -0.5 * (eps * eps + LOG2PI) - jnp.log(std)
+    lp_ref[0] = jnp.sum(lp)
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "interpret"))
+def sde_step(v: jax.Array, x: jax.Array, eps: jax.Array, t: jax.Array,
+             t_next: jax.Array, *, eta: float = 0.7,
+             interpret: bool = False):
+    """v, x, eps: (B, ...); t/t_next scalar f32. Returns (x_next, logp (B,))."""
+    B = x.shape[0]
+    feat = int(x.size // B)
+    vf = v.reshape(B, feat)
+    xf = x.reshape(B, feat)
+    ef = eps.reshape(B, feat)
+    tb = jnp.broadcast_to(jnp.asarray(t, F32), (1,))
+    tnb = jnp.broadcast_to(jnp.asarray(t_next, F32), (1,))
+
+    kernel = functools.partial(_sde_kernel, eta=eta)
+    x_next, logp = pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, feat), lambda b: (b, 0)),
+            pl.BlockSpec((1, feat), lambda b: (b, 0)),
+            pl.BlockSpec((1, feat), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (0,)),
+            pl.BlockSpec((1,), lambda b: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, feat), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, feat), F32),
+            jax.ShapeDtypeStruct((B,), F32),
+        ],
+        interpret=interpret,
+    )(vf, xf, ef, tb, tnb)
+    return x_next.reshape(x.shape), logp

@@ -1,0 +1,110 @@
+"""Mamba2 SSD chunked-scan Pallas kernel (TPU target).
+
+Grid: (B, H, n_chunks) — the chunk dimension is innermost, i.e. sequential on
+TPU, so the recurrent state lives in a VMEM scratch carried across chunk
+iterations.  Per chunk the kernel evaluates the SSD dual form:
+
+  y_diag = (exp(segsum(dA)) ⊙ (C·Bᵀ)) · (dt ⊙ x)      intra-chunk, quadratic
+  y_off  = exp(cum dA) ⊙ (C · h_prevᵀ)                 carried state
+  h_new  = exp(Σ dA)·h_prev + (decay-to-end ⊙ dt ⊙ x)ᵀ · B
+
+VMEM working set at Q=128, P=64, N=128:
+  x(128×64) + b/c(128×128) + att(128×128) + state(64×128) f32 ≈ 0.3 MB.
+MXU-aligned matmul dims (Q=128, N=128); P is the lane dim of y.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hT_ref, h_scr, *,
+                n_chunks: int, Q: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, :, 0, :].astype(F32)         # (Q, P)
+    dt = dt_ref[0, :, 0].astype(F32)          # (Q,)
+    a = a_ref[0].astype(F32)                  # ()
+    bm = b_ref[0].astype(F32)                 # (Q, N)
+    cm = c_ref[0].astype(F32)                 # (Q, N)
+
+    dA = dt * a                               # (Q,)
+    cum = jnp.cumsum(dA)                      # (Q,)
+    total = cum[-1]
+
+    # intra-chunk dual form
+    seg = cum[:, None] - cum[None, :]         # (Q, Q): sum_{j+1..i}
+    mask = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.where(mask, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=F32)   # (Q, Q)
+    att = decay * scores
+    xdt = x * dt[:, None]                     # (Q, P)
+    y = jax.lax.dot_general(att, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=F32)        # (Q, P)
+
+    # carried-state contribution
+    h_prev = h_scr[...]                       # (P, N)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cm, h_prev, (((1,), (1,)), ((), ())),
+        preferred_element_type=F32)           # (Q,N)·(P,N)ᵀ -> (Q,P)
+
+    # state update
+    w = jnp.exp(total - cum)[:, None] * xdt   # (Q, P)
+    h_scr[...] = jnp.exp(total) * h_prev + jax.lax.dot_general(
+        w, bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=F32)           # (P, N)
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        hT_ref[0, 0] = h_scr[...].astype(hT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, bm: jax.Array,
+             cm: jax.Array, *, chunk: int = 128, interpret: bool = False):
+    """x: (B,L,H,P); dt: (B,L,H); a: (H,); bm/cm: (B,L,N).
+
+    Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    B, L, H, P = x.shape
+    N = bm.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0
+    nc = L // Q
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=nc, Q=Q)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), F32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), F32)],
+        interpret=interpret,
+    )(x, dt, a, bm, cm)
+    return y, hT

@@ -1,0 +1,139 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape)
+pair on the production meshes, with NO device allocation (ShapeDtypeStruct
+inputs only).  The two lines above MUST stay the first statements — jax
+locks the device count on first init.
+
+Per pair it records to experiments/dryrun/<arch>__<shape>__<mesh>.json:
+  * memory_analysis()  — bytes per device (proves the config fits)
+  * cost_analysis()    — HLO FLOPs / bytes accessed (roofline numerators)
+  * collective traffic — parsed from the compiled HLO, per collective kind
+  * wall-clock lower/compile times
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k --flow-rl
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.config import INPUT_SHAPES
+from repro.launch import costs as costs_lib
+from repro.launch import hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_flow_step, build_step
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            flow_rl: bool = False, out_dir: str = "experiments/dryrun",
+            variant: str = "baseline") -> dict:
+    cfg = configs.get(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+
+    t0 = time.time()
+    with mesh:
+        if flow_rl:
+            fn, args = build_flow_step(cfg, mesh)
+        else:
+            fn, args = build_step(cfg, shape, mesh)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement every field
+        mem_info = {"error": str(e)}
+
+    try:
+        cost = compiled.cost_analysis()
+        cost_info = {k: float(v) for k, v in cost.items()
+                     if isinstance(v, (int, float))}
+    except Exception as e:
+        cost_info = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    analysis = hlo_stats.HloAnalysis(hlo)
+    coll = analysis.collectives()
+    ops = analysis.op_histogram()
+    analytic = (costs_lib.step_costs(cfg, shape).asdict()
+                if not flow_rl else {})
+
+    record = {
+        "arch": arch,
+        "shape": shape_name if not flow_rl else "flow_rl_update",
+        "mesh": mesh_name,
+        "variant": variant,
+        "n_devices": mesh.size,
+        "kind": "flow_rl" if flow_rl else shape.kind,
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem_info,
+        "cost": cost_info,
+        "analytic": analytic,
+        "collectives": coll,
+        "op_histogram": ops,
+    }
+
+    os.makedirs(out_dir, exist_ok=True)
+    tag = record["shape"]
+    suffix = f"__{variant}" if variant != "baseline" else ""
+    path = os.path.join(out_dir, f"{arch}__{tag}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS
+                    + configs.PAPER_ARCHS)
+    ap.add_argument("--shape", default="train_4k",
+                    choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--flow-rl", action="store_true",
+                    help="lower the paper's GRPO update step instead of the "
+                         "LM step")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+
+    try:
+        rec = run_one(args.arch, args.shape, multi_pod=args.multi_pod,
+                      flow_rl=args.flow_rl, out_dir=args.out_dir,
+                      variant=args.variant)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+
+    print(json.dumps({k: rec[k] for k in
+                      ("arch", "shape", "mesh", "compile_s", "memory",
+                       "collectives")}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

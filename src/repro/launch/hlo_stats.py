@@ -1,0 +1,220 @@
+"""HLO-text analysis: collective traffic, loop-aware.
+
+``cost_analysis()`` on the CPU backend counts ``while`` (lax.scan) bodies
+ONCE, independent of trip count — useless for scanned-layer models.  This
+parser walks the computation graph of the compiled (post-SPMD) HLO:
+
+* splits the module into computations,
+* recursively expands ``while`` bodies multiplied by their trip count
+  (recovered from the loop-condition's comparison constant),
+* for every all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute, records result bytes and converts to *link bytes moved
+  per device* using the textbook ring-algorithm factors and the participant
+  group size parsed from ``replica_groups``.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?.*\{")
+# `%name = <result-type> op(...)` — result may be a tuple containing layout
+# braces and /*index=N*/ comments, so locate the op as the identifier right
+# before the first '(' that FOLLOWS the result type instead.
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*")
+_OP_RE = re.compile(r"([\w\-]+)\(")
+
+
+def parse_instr(line: str):
+    """Returns (op, result_text) or None."""
+    m = _ASSIGN_RE.match(line)
+    if not m:
+        return None
+    rest = line[m.end():]
+    if rest.startswith("("):           # tuple result: find matching paren
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    result = rest[:i + 1]
+                    tail = rest[i + 1:]
+                    break
+        else:
+            return None
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        result = rest[:sp]
+        tail = rest[sp:]
+    om = _OP_RE.search(tail)
+    if not om:
+        return None
+    return om.group(1), result
+_CALLED_RE = re.compile(r"(condition|body|to_apply|branch_computations)="
+                        r"\{?%?([\w.\-]+)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _moved_bytes(kind: str, result_bytes: int, g: int) -> float:
+    """Per-device link traffic (ring algorithms)."""
+    if g <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return result_bytes * (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return result_bytes * (g - 1)          # operand = result × g
+    if kind == "all-to-all":
+        return result_bytes * (g - 1) / g
+    if kind == "collective-permute":
+        return float(result_bytes)
+    return 0.0
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    buf: List[str] = []
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and "{" in line:
+                cur = m.group(1)
+                buf = []
+        else:
+            if line.startswith("}") or line.strip() == "}":
+                comps[cur] = buf
+                cur = None
+            else:
+                buf.append(line)
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Heuristic: largest s32 scalar constant in the loop condition."""
+    consts = [int(m.group(1)) for line in cond_lines
+              for m in _CONST_RE.finditer(line)]
+    return max(consts) if consts else 1
+
+
+class HloAnalysis:
+    def __init__(self, hlo: str):
+        self.comps = split_computations(hlo)
+        self.entry = None
+        for line in hlo.splitlines():
+            if line.startswith("ENTRY"):
+                m = _COMP_HDR_RE.match(line)
+                if m:
+                    self.entry = m.group(1)
+        if self.entry is None:           # fall back: last computation
+            self.entry = list(self.comps)[-1] if self.comps else ""
+        self._memo: Dict[str, Dict] = {}
+
+    def _analyze(self, comp: str) -> Dict:
+        if comp in self._memo:
+            return self._memo[comp]
+        stats = {k: {"count": 0.0, "result_bytes": 0.0, "moved_bytes": 0.0}
+                 for k in COLLECTIVES}
+        ops: Dict[str, float] = defaultdict(float)
+        self._memo[comp] = {"coll": stats, "ops": ops}  # break cycles
+        for line in self.comps.get(comp, ()):
+            parsed = parse_instr(line)
+            if not parsed:
+                continue
+            op, result = parsed
+            ops[op] += 1
+            if op == "while":
+                called = dict((k, v) for k, v in _CALLED_RE.findall(line))
+                body = called.get("body")
+                cond = called.get("condition")
+                trip = _trip_count(self.comps.get(cond, [])) if cond else 1
+                if body:
+                    sub = self._analyze(body)
+                    for k in COLLECTIVES:
+                        for f in stats[k]:
+                            stats[k][f] += trip * sub["coll"][k][f]
+                    for o, c in sub["ops"].items():
+                        ops[o] += trip * c
+                continue
+            if op in ("call", "conditional"):
+                for _, callee in _CALLED_RE.findall(line):
+                    sub = self._analyze(callee)
+                    for k in COLLECTIVES:
+                        for f in stats[k]:
+                            stats[k][f] += sub["coll"][k][f]
+                continue
+            base = None
+            for k in COLLECTIVES:
+                if op == k or op == k + "-start":
+                    base = k
+                    break
+            if base is None:
+                continue
+            rb = _shape_bytes(result)
+            g = _group_size(line)
+            stats[base]["count"] += 1
+            stats[base]["result_bytes"] += rb
+            stats[base]["moved_bytes"] += _moved_bytes(base, rb, g)
+        return self._memo[comp]
+
+    def collectives(self) -> Dict[str, Dict[str, float]]:
+        res = self._analyze(self.entry)["coll"]
+        out = {k: dict(v) for k, v in res.items()}
+        out["_total"] = {
+            "count": sum(v["count"] for v in res.values()),
+            "result_bytes": sum(v["result_bytes"] for v in res.values()),
+            "moved_bytes": sum(v["moved_bytes"] for v in res.values()),
+        }
+        return out
+
+    def op_histogram(self, top: int = 30) -> Dict[str, float]:
+        ops = self._analyze(self.entry)["ops"]
+        return dict(sorted(ops.items(), key=lambda kv: -kv[1])[:top])
+
+
+def collective_bytes(hlo: str) -> Dict[str, Dict[str, float]]:
+    return HloAnalysis(hlo).collectives()
+
+
+def op_histogram(hlo: str, top: int = 30) -> Dict[str, float]:
+    return HloAnalysis(hlo).op_histogram(top)

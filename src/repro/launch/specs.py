@@ -1,0 +1,306 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape × mesh)
+dry-run combination — no device allocation anywhere.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro import sharding as shlib
+from repro.config import ArchConfig, InputShape, INPUT_SHAPES, OptimConfig
+from repro.models import params as params_lib
+from repro.models import tasks
+from repro.models.backbone import Backbone
+
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _shard_or_none(mesh: Mesh, axes, rules) -> NamedSharding:
+    return NamedSharding(mesh, shlib.pspec(axes, rules))
+
+
+def _divisible(n: int, mesh: Mesh, names) -> bool:
+    size = 1
+    for a in (names if isinstance(names, tuple) else (names,)):
+        if a in mesh.axis_names:
+            size *= mesh.shape[a]
+    return n % size == 0
+
+
+# ---------------------------------------------------------------------------
+# Parameter / optimizer / cache specs
+# ---------------------------------------------------------------------------
+
+INFERENCE_FSDP_THRESHOLD = 10e9   # bytes/device above which inference
+                                  # weights also shard over the data axis
+                                  # (weight-gathered serving mode)
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh, *, train: bool, fsdp: bool = True
+                ) -> Tuple[Any, Any]:
+    """Returns (ShapeDtypeStruct tree, NamedSharding tree) for params.
+
+    Inference (train=False): weights shard over "model" only, unless the
+    model doesn't fit a device that way — then the data axis is used too
+    (per-layer all-gather at use; memory-first serving for 100B+ models)."""
+    if not train and not fsdp:
+        model_shards = mesh.shape.get("model", 1)
+        if 2.0 * cfg.n_params() / model_shards > INFERENCE_FSDP_THRESHOLD:
+            fsdp = True
+    spec = Backbone(cfg).spec()
+    shapes = params_lib.shape_tree(spec, BF16)
+    axes = params_lib.axes_tree(spec)
+    rules = shlib.param_rules(mesh, fsdp=fsdp, train=train)
+
+    def to_shard(ax_tuple, shape_struct):
+        # drop shardings that don't divide (XLA would pad params — avoid for
+        # the fsdp axis where padding wastes real memory)
+        specs = []
+        for ax, dim in zip(ax_tuple, shape_struct.shape):
+            m = rules.get(ax) if ax else None
+            if m is not None and not _divisible(dim, mesh, m):
+                m = None
+            specs.append(m)
+        return NamedSharding(mesh, PartitionSpec(*specs))
+
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    shardings = jax.tree.map(to_shard, axes, shapes, is_leaf=is_ax)
+    return shapes, shardings
+
+
+def train_state_specs(cfg: ArchConfig, mesh: Mesh, *, fsdp: bool = True):
+    from repro import optim
+    p_shapes, p_shard = param_specs(cfg, mesh, train=True, fsdp=fsdp)
+    f32 = lambda s: _sds(s.shape, F32)
+    state_shapes = tasks.TrainState(
+        params=p_shapes,
+        opt=optim.AdamWState(step=_sds((), I32),
+                             mu=jax.tree.map(f32, p_shapes),
+                             nu=jax.tree.map(f32, p_shapes)))
+    state_shard = tasks.TrainState(
+        params=p_shard,
+        opt=optim.AdamWState(
+            step=NamedSharding(mesh, PartitionSpec()),
+            mu=p_shard, nu=p_shard))
+    return state_shapes, state_shard
+
+
+def cache_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh, *,
+                seq_shard: bool = True):
+    batch = shape.global_batch
+    cache_len = tasks.effective_cache_len(cfg, shape)
+    model = Backbone(cfg)
+    spec_tree = model.cache_specs(batch, cache_len)
+    # shard cache seq over data only when the batch can't use the data axis
+    b_ax = shlib.batch_axes(mesh)
+    batch_shardable = _divisible(batch, mesh, b_ax)
+    rules = shlib.act_rules(mesh, seq_shard=seq_shard and not batch_shardable)
+    if not batch_shardable:
+        rules["batch"] = None
+    # §Perf knob: shard decode caches' sequence dim over the model axis
+    # (sequence-sharded flash-decode — memory-capacity lever for 100B+
+    # models whose 32k KV cache exceeds HBM even batch-sharded)
+    if os.environ.get("REPRO_CACHE_SEQ_SHARD"):
+        rules["cache_seq"] = os.environ["REPRO_CACHE_SEQ_SHARD"]
+
+    def leaf(sa):
+        shp, axes = sa
+        specs = []
+        for ax, dim in zip(axes, shp):
+            m = rules.get(ax) if ax else None
+            if m is not None and not _divisible(dim, mesh, m):
+                m = None
+            specs.append(m)
+        return (_sds(shp, BF16), NamedSharding(mesh, PartitionSpec(*specs)))
+
+    is_sa = lambda x: (isinstance(x, tuple) and len(x) == 2
+                       and isinstance(x[0], tuple)
+                       and all(isinstance(d, int) for d in x[0]))
+    both = jax.tree.map(leaf, spec_tree, is_leaf=is_sa)
+    shapes = jax.tree.map(lambda t: t[0], both,
+                          is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                          and isinstance(x[0], jax.ShapeDtypeStruct))
+    shards = jax.tree.map(lambda t: t[1], both,
+                          is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                          and isinstance(x[0], jax.ShapeDtypeStruct))
+    return shapes, shards
+
+
+# ---------------------------------------------------------------------------
+# input_specs — every model input as ShapeDtypeStruct (the dry-run contract)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Batch inputs for the step kind of ``shape``.
+
+    Returns (shapes, shardings) dicts; training adds labels, vlm/audio adds
+    the stub-frontend prefix embeddings (assignment carve-out)."""
+    B, S = shape.global_batch, shape.seq_len
+    b_ax = shlib.batch_axes(mesh)
+    batch_ok = _divisible(B, mesh, b_ax)
+    bspec = b_ax if (b_ax and batch_ok) else None
+
+    def sh(*axes):
+        return NamedSharding(mesh, PartitionSpec(*axes))
+
+    if shape.kind == "train":
+        shapes = {"tokens": _sds((B, S), I32), "labels": _sds((B, S), I32)}
+        shards = {"tokens": sh(bspec, None), "labels": sh(bspec, None)}
+    elif shape.kind == "prefill":
+        shapes = {"tokens": _sds((B, S), I32)}
+        shards = {"tokens": sh(bspec, None)}
+    else:  # decode: one new token against a seq_len cache
+        shapes = {"token": _sds((B, 1), I32)}
+        shards = {"token": sh(bspec, None)}
+    if cfg.frontend.kind != "none" and shape.kind != "decode":
+        fe = cfg.frontend
+        shapes["prefix_embed"] = _sds((B, fe.n_tokens, fe.embed_dim), BF16)
+        shards["prefix_embed"] = sh(bspec, None, None)
+    return shapes, shards
+
+
+# ---------------------------------------------------------------------------
+# Step builders for the dry-run
+# ---------------------------------------------------------------------------
+
+def build_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+               opt_cfg: Optional[OptimConfig] = None):
+    """Returns (jitted_fn, example_args_shapes) ready to .lower(...)."""
+    opt_cfg = opt_cfg or OptimConfig()
+    window = tasks.effective_window(cfg, shape)
+    batch_shapes, batch_shards = input_specs(cfg, shape, mesh)
+    # weight-gathered FSDP: constrain per-layer weight slices to the
+    # gathered layout inside scan bodies (see sharding.py) — without this
+    # the partitioner all-gathers ACTIVATIONS to global batch instead.
+    # Only pays off when activations ≫ weights, i.e. TRAINING; at decode the
+    # partitioner's activation-gather choice is the right one (tiny x, huge W).
+    if shape.kind == "train" and not os.environ.get("REPRO_NO_WEIGHT_GATHER"):
+        shlib.set_param_gather(mesh)
+    else:
+        shlib.set_param_gather(None)
+
+    if shape.kind == "train":
+        step = tasks.make_train_step(cfg, opt_cfg, window=window, remat=True)
+        st_shapes, st_shards = train_state_specs(cfg, mesh)
+        fn = jax.jit(step, in_shardings=(st_shards, batch_shards),
+                     out_shardings=(st_shards, None), donate_argnums=0)
+        return fn, (st_shapes, batch_shapes)
+
+    if shape.kind == "prefill":
+        step = tasks.make_prefill_step(cfg, window=window)
+        p_shapes, p_shards = param_specs(cfg, mesh, train=False, fsdp=False)
+        fn = jax.jit(step, in_shardings=(p_shards, batch_shards))
+        return fn, (p_shapes, batch_shapes)
+
+    # decode
+    step = tasks.make_decode_step(cfg, window=window)
+    p_shapes, p_shards = param_specs(cfg, mesh, train=False, fsdp=False)
+    c_shapes, c_shards = cache_specs(cfg, shape, mesh)
+    pos_shape = _sds((), I32)
+    pos_shard = NamedSharding(mesh, PartitionSpec())
+    fn = jax.jit(step, in_shardings=(p_shards, c_shards,
+                                     batch_shards["token"], pos_shard),
+                 donate_argnums=1)      # ring-buffer cache updates in place
+    return fn, (p_shapes, c_shapes, batch_shapes["token"], pos_shape)
+
+
+# ---------------------------------------------------------------------------
+# Flow-RL (paper pipeline) dry-run step: one GRPO update on trajectories
+# ---------------------------------------------------------------------------
+
+def build_flow_step(cfg: ArchConfig, mesh: Mesh, *,
+                    num_steps: int = 10, latent_tokens: int = 1024,
+                    latent_dim: int = 16, cond_len: int = 16,
+                    cond_dim: int = 512, group_size: int = 8,
+                    prompts: int = 32):
+    """The paper's own training step (Flow-GRPO update) at production scale:
+    lowered for the representative archs in the §Perf hillclimb."""
+    from repro.config import FlowRLConfig
+    from repro.core.trainers.grpo import FlowGRPOTrainer
+
+    flow_cfg = FlowRLConfig(num_steps=num_steps, group_size=group_size,
+                            latent_tokens=latent_tokens, latent_dim=latent_dim)
+    opt_cfg = OptimConfig()
+    if os.environ.get("REPRO_NO_WEIGHT_GATHER"):
+        shlib.set_param_gather(None)
+    else:
+        shlib.set_param_gather(mesh)
+    B = prompts * group_size
+    trainer = FlowGRPOTrainer.__new__(FlowGRPOTrainer)
+    # build without allocating params (dry-run only)
+    from repro.core import schedulers
+    from repro.models.flow import FlowAdapter
+    trainer.cfg = cfg
+    trainer.flow = flow_cfg
+    trainer.opt_cfg = opt_cfg
+    trainer.adapter = FlowAdapter(cfg, flow_cfg, cond_dim)
+    trainer.scheduler = schedulers.build(flow_cfg.sde_type, flow_cfg.eta)
+    from repro import optim
+    trainer._lr = optim.make_schedule(opt_cfg)
+
+    spec = trainer.adapter.spec()
+    p_shapes = params_lib.shape_tree(spec, BF16)
+    axes = params_lib.axes_tree(spec)
+    rules = shlib.param_rules(mesh, fsdp=True, train=True)
+
+    def to_shard(ax_tuple, shape_struct):
+        specs = []
+        for ax, dim in zip(ax_tuple, shape_struct.shape):
+            m = rules.get(ax) if ax else None
+            if m is not None and not _divisible(dim, mesh, m):
+                m = None
+            specs.append(m)
+        return NamedSharding(mesh, PartitionSpec(*specs))
+
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    p_shards = jax.tree.map(to_shard, axes, p_shapes, is_leaf=is_ax)
+
+    from repro.core.rollout import Trajectory
+    from repro.core.trainers.base import RLState
+    b_ax = shlib.batch_axes(mesh)
+    T = num_steps
+    traj_shapes = Trajectory(
+        xs=_sds((T + 1, B, latent_tokens, latent_dim), F32),
+        logps=_sds((T, B), F32),
+        ts=_sds((T + 1,), F32),
+        sde_mask=_sds((T,), jnp.bool_),
+        cond=_sds((B, cond_len, cond_dim), F32))
+    rep = NamedSharding(mesh, PartitionSpec())
+    bsh = NamedSharding(mesh, PartitionSpec(None, b_ax))
+    traj_shards = Trajectory(
+        xs=NamedSharding(mesh, PartitionSpec(None, b_ax, None, None)),
+        logps=bsh, ts=rep, sde_mask=rep,
+        cond=NamedSharding(mesh, PartitionSpec(b_ax, None, None)))
+    adv_shapes = _sds((B,), F32)
+    adv_shards = NamedSharding(mesh, PartitionSpec(b_ax))
+    key_shapes = _sds((2,), jnp.uint32)
+
+    from repro import optim as optim_lib
+    st_shapes = RLState(
+        params=p_shapes,
+        opt=optim_lib.AdamWState(
+            step=_sds((), I32),
+            mu=jax.tree.map(lambda s: _sds(s.shape, F32), p_shapes),
+            nu=jax.tree.map(lambda s: _sds(s.shape, F32), p_shapes)))
+    st_shards = RLState(params=p_shards,
+                        opt=optim_lib.AdamWState(step=rep, mu=p_shards,
+                                                 nu=p_shards))
+
+    fn = jax.jit(trainer._update,
+                 in_shardings=(st_shards, traj_shards, adv_shards, rep),
+                 out_shardings=(st_shards, None), donate_argnums=0)
+    return fn, (st_shapes, traj_shapes, adv_shapes, key_shapes)

@@ -1,0 +1,94 @@
+"""Dry-run sweep driver: every (arch × shape) × {single-pod, multi-pod} in a
+fresh subprocess (clean XLA_FLAGS / device-count state per run), resumable —
+existing artifact JSONs are skipped.
+
+  PYTHONPATH=src python -m repro.launch.sweep [--multi-pod-only] [--archs a,b]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro import configs
+from repro.config import INPUT_SHAPES
+
+OUT_DIR = "experiments/dryrun"
+
+
+def artifact_path(arch: str, shape: str, multi_pod: bool,
+                  variant: str = "baseline") -> str:
+    mesh = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = f"__{variant}" if variant != "baseline" else ""
+    return os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh}{suffix}.json")
+
+
+def run_pair(arch: str, shape: str, multi_pod: bool, *, timeout: int = 3600,
+             variant: str = "baseline", extra_env=None) -> dict:
+    path = artifact_path(arch, shape, multi_pod, variant)
+    if os.path.exists(path):
+        with open(path) as f:
+            return {"skipped": True, **json.load(f)}
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--variant", variant]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = "src"
+    if extra_env:
+        env.update(extra_env)
+    t0 = time.time()
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
+                       env=env, cwd=os.getcwd())
+    ok = r.returncode == 0 and os.path.exists(path)
+    return {"ok": ok, "wall_s": round(time.time() - t0, 1),
+            "stderr_tail": r.stderr[-2000:] if not ok else ""}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default=",".join(configs.ARCH_IDS))
+    ap.add_argument("--shapes", default=",".join(INPUT_SHAPES))
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--timeout", type=int, default=5400)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--env", default="",
+                    help="comma-separated KEY=VAL extra env for dryrun")
+    args = ap.parse_args()
+
+    extra_env = dict(kv.split("=", 1) for kv in args.env.split(",") if kv)
+    archs = args.archs.split(",")
+    shapes = args.shapes.split(",")
+    meshes = args.meshes.split(",")
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh in meshes:
+                multi = mesh == "multi"
+                tag = f"{arch} × {shape} × {'2pod' if multi else '1pod'}"
+                try:
+                    r = run_pair(arch, shape, multi, timeout=args.timeout,
+                                 variant=args.variant, extra_env=extra_env)
+                except subprocess.TimeoutExpired:
+                    r = {"ok": False, "stderr_tail": "TIMEOUT"}
+                if r.get("skipped"):
+                    print(f"[skip] {tag}", flush=True)
+                elif r.get("ok"):
+                    print(f"[ok]   {tag}  ({r['wall_s']}s)", flush=True)
+                else:
+                    print(f"[FAIL] {tag}\n{r.get('stderr_tail', '')}",
+                          flush=True)
+                results.append((tag, r))
+    n_fail = sum(1 for _, r in results if not (r.get("ok") or
+                                               r.get("skipped")))
+    print(f"\nsweep done: {len(results)} pairs, {n_fail} failures")
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

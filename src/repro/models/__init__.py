@@ -1,0 +1,4 @@
+from repro.models.backbone import Backbone
+from repro.models import tasks
+
+__all__ = ["Backbone", "tasks"]

@@ -1,0 +1,100 @@
+"""FlowAdapter — the paper's ``BaseAdapter`` model operation: wrap *any*
+backbone in the zoo as a flow-matching velocity field ``v_θ(x_t, c, t)``.
+
+Latent tokens (the "image"/"video" latent of the paper's Flux/WAN pipelines)
+are projected into the backbone width, prefixed with projected condition
+embeddings (from the preprocessing cache) and a timestep token, run through
+the backbone, and projected back to latent space.
+
+* ``dit`` family backbones run bidirectionally with adaLN-zero conditioning
+  (exactly a FLUX-style DiT).
+* LM-family backbones (all 10 assigned archs) run causally with the
+  condition prefix — causal DiT semantics.  SSM/hybrid backbones are causal
+  by construction, which is why the technique stays applicable to them
+  (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import registry
+from repro.config import ArchConfig, FlowRLConfig
+from repro.models import layers
+from repro.models.backbone import Backbone
+from repro.models.params import P
+
+F32 = jnp.float32
+
+
+@registry.register("adapter", "flow")
+class FlowAdapter:
+    """Velocity-field adapter over a Backbone."""
+
+    def __init__(self, cfg: ArchConfig, flow_cfg: FlowRLConfig,
+                 cond_dim: int = 512):
+        self.cfg = cfg
+        self.flow_cfg = flow_cfg
+        self.cond_dim = cond_dim
+        self.backbone = Backbone(cfg)
+
+    # ------------------------------------------------------------------ spec
+    def spec(self) -> Dict:
+        d = self.cfg.d_model
+        ld = self.flow_cfg.latent_dim
+        s = {
+            "backbone": self.backbone.spec(),
+            "latent_in": P((ld, d), ("latent", "embed")),
+            "latent_out": P((d, ld), ("embed", "latent"), "small"),
+            "time_w1": P((d, d), ("embed", "time")),
+            "time_w2": P((d, d), ("time", "embed")),
+            "cond_proj": P((self.cond_dim, d), ("cond", "embed")),
+        }
+        return s
+
+    # -------------------------------------------------------------- velocity
+    def velocity(self, params: Dict, x_t: jax.Array, t: jax.Array,
+                 cond: jax.Array) -> jax.Array:
+        """x_t: (B, Lt, latent_dim); t: (B,) in [0,1]; cond: (B, Lc, cond_dim).
+
+        Returns v: (B, Lt, latent_dim).
+        """
+        cfg = self.cfg
+        B, Lt, ld = x_t.shape
+        dtype = params["latent_in"].dtype
+
+        h_lat = jnp.einsum("bld,de->ble", x_t.astype(dtype),
+                           params["latent_in"],
+                           preferred_element_type=F32).astype(dtype)
+        h_cond = jnp.einsum("blc,cd->bld", cond.astype(dtype),
+                            params["cond_proj"],
+                            preferred_element_type=F32).astype(dtype)
+        t_feat = layers.timestep_embedding(t, cfg.d_model).astype(dtype)
+        t_emb = jnp.einsum(
+            "bd,de->be",
+            jax.nn.silu(jnp.einsum("bd,de->be", t_feat, params["time_w1"],
+                                   preferred_element_type=F32)).astype(dtype),
+            params["time_w2"], preferred_element_type=F32).astype(dtype)
+
+        if cfg.family == "dit":
+            # bidirectional DiT: condition prefix + adaLN time modulation
+            x = jnp.concatenate([h_cond, h_lat], axis=1)
+            hidden, _, _ = self.backbone.forward_embeds(
+                params["backbone"], x, causal=False, cond=t_emb)
+        else:
+            # causal DiT: [cond prefix; time token; latent tokens]
+            x = jnp.concatenate([h_cond, t_emb[:, None, :], h_lat], axis=1)
+            hidden, _, _ = self.backbone.forward_embeds(
+                params["backbone"], x, causal=True)
+        h_out = hidden[:, -Lt:]
+        v = jnp.einsum("bld,dk->blk", h_out, params["latent_out"],
+                       preferred_element_type=F32)
+        return v.astype(F32)
+
+    # ------------------------------------------------------------------ misc
+    def init_latent(self, key: jax.Array, batch: int) -> jax.Array:
+        return jax.random.normal(
+            key, (batch, self.flow_cfg.latent_tokens, self.flow_cfg.latent_dim),
+            F32)

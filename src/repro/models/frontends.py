@@ -1,0 +1,55 @@
+"""Stub modality frontends (assignment carve-out).
+
+The [vlm] and [audio] architectures specify the transformer backbone only;
+the modality frontend (ViT vision encoder / EnCodec conv feature extractor)
+is a STUB: ``embeddings()`` produces deterministic precomputed patch/frame
+embeddings of the right shape, and ``input_specs`` passes equivalent
+ShapeDtypeStructs at dry-run time.  The decoder that consumes them is fully
+implemented.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import registry
+from repro.config import ArchConfig, FrontendConfig
+
+
+@registry.register("frontend", "none")
+class NoFrontend:
+    def __init__(self, cfg: FrontendConfig):
+        self.cfg = cfg
+
+    def embeddings(self, key: jax.Array, batch: int) -> None:
+        return None
+
+
+class _StubFrontend:
+    """Deterministic hash-seeded embedding generator standing in for a frozen
+    encoder; the real pipeline would run InternViT / EnCodec here and the
+    preprocessing cache (repro.core.preprocess) would store its outputs."""
+
+    def __init__(self, cfg: FrontendConfig):
+        assert cfg.n_tokens > 0 and cfg.embed_dim > 0
+        self.cfg = cfg
+
+    def embeddings(self, key: jax.Array, batch: int) -> jax.Array:
+        return jax.random.normal(
+            key, (batch, self.cfg.n_tokens, self.cfg.embed_dim),
+            jnp.float32).astype(jnp.bfloat16)
+
+
+@registry.register("frontend", "vision")
+class VisionFrontendStub(_StubFrontend):
+    """InternViT patch embeddings (InternVL2, arXiv:2404.16821)."""
+
+
+@registry.register("frontend", "audio")
+class AudioFrontendStub(_StubFrontend):
+    """EnCodec conditioning frames (MusicGen, arXiv:2306.05284)."""
+
+
+def build(cfg: FrontendConfig):
+    return registry.build("frontend", cfg.kind, cfg)

@@ -1,0 +1,154 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Keys/values are compressed into a rank-``kv_lora_rank`` latent ``c_kv`` plus a
+small shared RoPE key.  Train/prefill expands the latent into per-head K/V;
+decode uses the *absorbed* formulation (W_uk folded into the query, W_uv into
+the output), so the KV cache is only ``(T, kv_lora_rank + rope_dim)`` per
+sequence — the memory win that defines MLA.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import layers
+from repro.models.params import P
+
+F32 = layers.F32
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # (B, T, R)   compressed KV latent
+    k_rope: jax.Array  # (B, T, Dr)  shared rope key
+
+
+def spec(cfg: ArchConfig) -> Dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": P((d, m.q_lora_rank), ("embed", "q_lora")),
+        "q_norm": P((m.q_lora_rank,), ("norm",), "ones"),
+        "w_uq": P((m.q_lora_rank, H, qk), ("q_lora", "heads", "head_dim")),
+        "w_dkv": P((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                   ("embed", "kv_lora")),
+        "kv_norm": P((m.kv_lora_rank,), ("norm",), "ones"),
+        "w_uk": P((m.kv_lora_rank, H, m.qk_nope_head_dim),
+                  ("kv_lora", "heads", "head_dim")),
+        "w_uv": P((m.kv_lora_rank, H, m.v_head_dim),
+                  ("kv_lora", "heads", "head_dim")),
+        "wo": P((H, m.v_head_dim, d), ("heads", "head_dim", "embed_r")),
+    }
+
+
+def _q_proj(p: Dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (q_nope (B,S,H,Dn), q_rope (B,S,H,Dr))."""
+    m = cfg.mla
+    cq = layers.rmsnorm(p["q_norm"],
+                        jnp.einsum("bsd,dr->bsr", x, p["w_dq"],
+                                   preferred_element_type=F32).astype(x.dtype),
+                        cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"],
+                   preferred_element_type=F32).astype(x.dtype)
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = layers.apply_rope(q[..., m.qk_nope_head_dim:], positions,
+                               cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _kv_latent(p: Dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (c_kv (B,S,R), k_rope (B,S,Dr))."""
+    m = cfg.mla
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"],
+                     preferred_element_type=F32).astype(x.dtype)
+    c_kv = layers.rmsnorm(p["kv_norm"], dkv[..., :m.kv_lora_rank],
+                          cfg.norm_eps)
+    k_rope = dkv[..., m.kv_lora_rank:]
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], positions,
+                               cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def apply_full(p: Dict, cfg: ArchConfig, x: jax.Array, *,
+               causal: bool = True, window: int = 0,
+               positions: Optional[jax.Array] = None,
+               return_cache: bool = False
+               ) -> Tuple[jax.Array, Optional[MLACache]]:
+    """Train/prefill path: expand the latent into per-head K/V."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    q_nope, q_rope = _q_proj(p, cfg, x, positions)
+    c_kv, k_rope = _kv_latent(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"],
+                        preferred_element_type=F32).astype(x.dtype)
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"],
+                   preferred_element_type=F32).astype(x.dtype)
+    # concat nope+rope so we can reuse the shared attention math; the rope key
+    # is broadcast across heads
+    H = cfg.n_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, S, H, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    o = layers.attention_chunked(q, k, v, causal=causal, window=window,
+                                 q_positions=positions, k_positions=positions,
+                                 scale=scale)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"],
+                     preferred_element_type=F32).astype(x.dtype)
+    cache = MLACache(c_kv, k_rope) if return_cache else None
+    return out, cache
+
+
+def apply_decode(p: Dict, cfg: ArchConfig, x: jax.Array, cache: MLACache,
+                 pos: jax.Array, *, window: int = 0
+                 ) -> Tuple[jax.Array, MLACache]:
+    """Absorbed decode: attention runs in the rank-R latent space.
+
+    scores_h = q_nope_h · W_uk_h · c_kv  +  q_rope_h · k_rope
+    out_h    = (softmax · c_kv) · W_uv_h
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    positions = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_rope = _q_proj(p, cfg, x, positions)       # (B,1,H,*)
+    c_new, kr_new = _kv_latent(p, cfg, x, positions)     # (B,1,R),(B,1,Dr)
+    # attend over the FULL cache plus the new entry (T+1)…
+    c_kv = jnp.concatenate([cache.c_kv, c_new], axis=1)
+    k_rope = jnp.concatenate([cache.k_rope, kr_new], axis=1)
+
+    # absorb W_uk into the query: (B,H,R)
+    q_abs = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], p["w_uk"],
+                       preferred_element_type=F32).astype(x.dtype)
+    s_nope = jnp.einsum("bhr,btr->bht", q_abs, c_kv,
+                        preferred_element_type=F32)
+    s_rope = jnp.einsum("bhk,btk->bht", q_rope[:, 0], k_rope,
+                        preferred_element_type=F32)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    w = jax.nn.softmax((s_nope + s_rope) * scale, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bht,btr->bhr", w, c_kv,
+                       preferred_element_type=F32).astype(x.dtype)
+    # absorb W_uv on the way out
+    o = jnp.einsum("bhr,rhk->bhk", o_lat, p["w_uv"],
+                   preferred_element_type=F32).astype(x.dtype)
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"],
+                     preferred_element_type=F32)[:, None, :].astype(x.dtype)
+    # …then roll the ring buffer (oldest entry out, shape stays static)
+    return out, MLACache(c_kv[:, 1:], k_rope[:, 1:])
+
+
+def init_cache_shapes(cfg: ArchConfig, batch: int, cache_len: int):
+    m = cfg.mla
+    return {
+        "c_kv": ((batch, cache_len, m.kv_lora_rank),
+                 ("batch", "cache_seq", "kv_lora")),
+        "k_rope": ((batch, cache_len, m.qk_rope_head_dim),
+                   ("batch", "cache_seq", "head_dim")),
+    }

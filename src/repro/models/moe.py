@@ -1,0 +1,195 @@
+"""Mixture-of-Experts layer (grok-1: 8e top-2; deepseek-v2: 2 shared + 160e top-6).
+
+Dispatch is scatter-based (megablocks-style slots) rather than the GShard
+(T, E, C) one-hot einsum: a (T·k,) slot index scatters tokens into a
+(G, E, C, d) buffer, experts run batched over the stacked weights, and a
+gather brings results back.  This avoids materialising the (T, E, C)
+dispatch tensor (which at deepseek-v2 scale would be ~4 GB/device) while
+remaining fully static-shaped for jit/pjit.
+
+Sharding modes:
+  * "tensor" (baseline): each expert's hidden dim sharded over "model"
+    (always divides); the expert d_model dims carry the distinct logical
+    axes "moe_in"/"moe_out" so the weight-gathered-FSDP constraint can keep
+    expert weights SHARDED while gathering the (much smaller) dense weights
+    — gathering 160 experts per layer would invert the win.
+  * "ep_model" (REPRO_MOE_MODE=ep_model): experts sharded over the "model"
+    axis (requires E % model == 0, e.g. deepseek's 160); the dispatch buffer
+    is resharded group-parallel -> expert-parallel around the expert matmul
+    (the classic all-to-all pair), per-expert f unsharded.
+  * "dense" (REPRO_MOE_MODE=dense): small-E mode — compute every expert on
+    every token and mix by dense gates; E/top_k FLOP overcompute buys
+    dispatch-free communication (grok-1: 13.6× less traffic, EXPERIMENTS.md
+    §Perf iteration 2).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shlib
+from repro.config import ArchConfig
+from repro.models import layers
+from repro.models.params import P
+
+F32 = layers.F32
+
+
+def _edot(eq: str, a: jax.Array, w: jax.Array, pet) -> jax.Array:
+    """Expert einsum. The CPU backend's DotThunk cannot execute some
+    bf16×bf16→f32 batched dots (test/CI path only) — upcast there; on TPU
+    keep bf16 operands with the requested accumulation dtype."""
+    if jax.default_backend() == "cpu" and a.dtype == jnp.bfloat16:
+        return jnp.einsum(eq, a.astype(F32), w.astype(F32))
+    return jnp.einsum(eq, a, w, preferred_element_type=pet)
+
+
+def moe_mode(cfg: ArchConfig) -> str:
+    """tensor (default) | ep_model | dense — see module docstring."""
+    return os.environ.get("REPRO_MOE_MODE", cfg.moe.sharding or "tensor")
+
+
+def spec(cfg: ArchConfig) -> Dict:
+    m = cfg.moe
+    d, E, f = cfg.d_model, m.n_experts, m.expert_d_ff
+    mode = moe_mode(cfg)
+    if mode == "ep_model":
+        # experts over the model axis (E % 16 == 0, e.g. deepseek's 160);
+        # per-expert f stays unsharded, d fsdp-sharded + gathered at use
+        ex, fa = "experts_mdl", "moe_f"
+    else:
+        ex, fa = "experts", "mlp"
+    s = {
+        "router": P((d, E), ("embed", None), "small"),
+        "w_gate": P((E, d, f), (ex, "moe_in", fa)),
+        "w_up": P((E, d, f), (ex, "moe_in", fa)),
+        "w_down": P((E, f, d), (ex, fa, "moe_out")),
+    }
+    if m.n_shared_experts:
+        s["shared"] = layers.mlp_spec(d, m.n_shared_experts * f)
+    return s
+
+
+def capacity(tokens_per_group: int, cfg: ArchConfig) -> int:
+    m = cfg.moe
+    c = int(2.0 * tokens_per_group * m.top_k / m.n_experts) + 1
+    return max(4, -(-c // 4) * 4)  # round up to multiple of 4
+
+
+def _slots_one_group(idx: jax.Array, E: int, C: int) -> Tuple[jax.Array,
+                                                              jax.Array]:
+    """idx: (T, k) expert assignments -> (slot (Tk,), keep (Tk,)).
+
+    slot ∈ [0, E·C) for kept assignments, E·C (overflow row) for drops;
+    rank-within-expert in token order is the drop priority."""
+    T, k = idx.shape
+    flat_e = idx.reshape(T * k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # (Tk, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    rank = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = rank < C
+    slot = jnp.where(keep, flat_e * C + rank, E * C)
+    return slot, keep
+
+
+def _dense_all_experts(p: Dict, cfg: ArchConfig, xg: jax.Array,
+                       gates: jax.Array, idx: jax.Array) -> jax.Array:
+    """Small-E mode (grok: top-2 of 8): compute EVERY expert on every token
+    and mix by dense gates.  Trades E/top_k FLOP overcompute for dispatch-
+    free communication: the only collective is the token-space partial-sum
+    all-reduce of the fused (E·f → d) contraction — slot buffers, scatters
+    and their partitioner-hostile gathers disappear entirely."""
+    m = cfg.moe
+    G, T, d = xg.shape
+    E = m.n_experts
+    gates_dense = jnp.zeros((G, T, E), xg.dtype).at[
+        jnp.arange(G)[:, None, None],
+        jnp.arange(T)[None, :, None], idx].set(gates.astype(xg.dtype))
+    g = _edot("gtd,edf->gtef", xg, p["w_gate"], F32)
+    u = _edot("gtd,edf->gtef", xg, p["w_up"], F32)
+    h = (jax.nn.silu(g) * u).astype(xg.dtype)
+    # fold the gates into h FIRST (elementwise), then contract E and f in a
+    # single dot -> the partial-sum AR is token-space (G,T,d).  A 3-operand
+    # einsum here lets XLA contract f before e, all-reducing an E×-larger
+    # (E,d,G,T) intermediate (measured: 3.1 TB/step on grok).
+    h = h * gates_dense[..., None]
+    return _edot("gtef,efd->gtd", h, p["w_down"],
+                 layers.reduce_dtype()).astype(xg.dtype)
+
+
+def _slot_dispatch(p: Dict, cfg: ArchConfig, xg: jax.Array, gates: jax.Array,
+                   idx: jax.Array, C: int, ep_model: bool) -> jax.Array:
+    m = cfg.moe
+    G, T, d = xg.shape
+    E, k = m.n_experts, m.top_k
+    slot, keep = jax.vmap(functools.partial(_slots_one_group, E=E, C=C))(idx)
+    row = E * C + 1                                           # +overflow row
+    gslot = (jnp.arange(G)[:, None] * row + slot).reshape(-1)  # (G·Tk,)
+    xs = jnp.repeat(xg, k, axis=1).reshape(G * T * k, d)
+    buf = jnp.zeros((G * row, d), xg.dtype).at[gslot].add(xs)
+    buf = buf.reshape(G, row, d)[:, :E * C].reshape(G, E, C, d)
+
+    if ep_model:   # reshard: groups stay on data, experts go to model (a2a)
+        buf = shlib.constrain_act(buf, ("batch", "experts_mdl", None, None))
+
+    g = _edot("gecd,edf->gecf", buf, p["w_gate"], F32)
+    u = _edot("gecd,edf->gecf", buf, p["w_up"], F32)
+    h = (jax.nn.silu(g) * u).astype(xg.dtype)
+    y = _edot("gecf,efd->gecd", h, p["w_down"],
+              layers.reduce_dtype()).astype(xg.dtype)
+
+    if ep_model:   # back to group-parallel for the combine (reverse a2a)
+        y = shlib.constrain_act(y, ("batch", None, None, None))
+
+    y_flat = jnp.concatenate(
+        [y.reshape(G, E * C, d), jnp.zeros((G, 1, d), xg.dtype)], axis=1)
+    y_tok = jnp.take_along_axis(
+        y_flat, slot.reshape(G, T * k)[..., None], axis=1)
+    y_tok = y_tok * (gates.reshape(G, T * k, 1).astype(xg.dtype)
+                     * keep.reshape(G, T * k, 1))
+    return y_tok.reshape(G, T, k, d).sum(axis=2)
+
+
+def apply(p: Dict, cfg: ArchConfig, x: jax.Array
+          ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, d) -> (y, aux).  Groups = sequences (or the whole batch for
+    single-token decode) so dispatch stays local under data sharding."""
+    m = cfg.moe
+    mode = moe_mode(cfg)
+    B, S, d = x.shape
+    xg = x.reshape(1, B, d) if S == 1 else x
+    G, T, _ = xg.shape
+    E, k = m.n_experts, m.top_k
+    C = capacity(T, cfg)
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"],
+                        preferred_element_type=F32)          # (G,T,E) f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                     # (G,T,k)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+
+    if mode == "dense":
+        out = _dense_all_experts(p, cfg, xg, gates, idx)
+    else:
+        out = _slot_dispatch(p, cfg, xg, gates, idx, C,
+                             ep_model=(mode == "ep_model"))
+    if S == 1:
+        out = out.reshape(B, S, d)
+
+    if m.n_shared_experts:
+        out = out + layers.mlp(p["shared"], x)
+
+    # auxiliary losses (Switch-style load balance + router z-loss)
+    me = probs.mean(axis=(0, 1))                             # (E,)
+    ce = (jax.nn.one_hot(idx, E, dtype=F32)
+          .sum(axis=2).mean(axis=(0, 1)))                    # frac tokens/e
+    aux = {
+        "moe_lb_loss": E * jnp.sum(me * ce) * m.aux_loss_coef,
+        "moe_z_loss": (jax.nn.logsumexp(logits, axis=-1) ** 2).mean()
+        * m.router_z_coef,
+    }
+    return out, aux

@@ -1,0 +1,78 @@
+"""Parameter specification trees.
+
+A model is described by a pytree whose leaves are :class:`P` — (shape,
+logical axes, initializer).  From one spec tree we derive:
+
+* ``init(spec, key, dtype)``      -> params pytree (same structure)
+* ``axes_tree(spec)``             -> pytree of logical-axes tuples (for sharding)
+* ``shape_tree(spec, dtype)``     -> pytree of ShapeDtypeStruct (for dry-run)
+
+Keeping shapes/axes/init in a single place guarantees the sharding spec can
+never drift from the parameter structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | small
+    scale: Optional[float] = None  # stddev override; default 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_p(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def _init_leaf(p: P, key: jax.Array, dtype) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "normal":
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+        scale = p.scale if p.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, p.shape, jnp.float32) * scale).astype(dtype)
+    if p.init == "small":
+        scale = p.scale if p.scale is not None else 0.02
+        return (jax.random.normal(key, p.shape, jnp.float32) * scale).astype(dtype)
+    raise ValueError(f"unknown init {p.init}")
+
+
+def init(spec, key: jax.Array, dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree.flatten(spec, is_leaf=_is_p)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = [_init_leaf(p, k, dtype) for p, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def axes_tree(spec):
+    return jax.tree.map(lambda p: p.axes, spec, is_leaf=_is_p)
+
+
+def shape_tree(spec, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype), spec, is_leaf=_is_p)
+
+
+def n_params(spec) -> int:
+    return sum(int(np.prod(p.shape)) for p in
+               jax.tree.leaves(spec, is_leaf=_is_p))
+
+
+def stack(spec, n: int, axis_name: Optional[str] = "layers"):
+    """Add a leading stacking dim (for lax.scan over layers)."""
+    return jax.tree.map(
+        lambda p: P((n,) + p.shape, (axis_name,) + p.axes, p.init, p.scale),
+        spec, is_leaf=_is_p)

@@ -1,0 +1,227 @@
+"""Mamba2 SSD block (state-space duality, arXiv:2405.21060).
+
+The sequence transform is the chunked SSD algorithm: within-chunk terms via
+the quadratic "attention-like" dual form, across-chunk terms via a scanned
+state recurrence.  This is exactly the structure the Pallas ``ssd_scan``
+kernel implements on TPU; this module is the jnp reference / XLA path.
+
+Shapes (per layer):
+  x   (B, L, H, P)   values (H = d_inner/head_dim heads, P = head_dim)
+  dt  (B, L, H)      positive step sizes (softplus)
+  A   (H,)           negative decay rates
+  Bm  (B, L, N)      input projections (single state group, mamba2 default)
+  Cm  (B, L, N)      output projections
+  state (B, H, P, N) recurrent state (decode cache — O(1) in context length!)
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import layers
+from repro.models.params import P
+
+F32 = layers.F32
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array    # (B, d_conv-1, conv_dim) trailing conv inputs
+    state: jax.Array   # (B, H, P, N)
+
+
+def dims(cfg: ArchConfig) -> Dict[str, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.d_state
+    return dict(d_in=d_in, H=H, P=s.head_dim, N=s.d_state,
+                conv_dim=conv_dim, Q=s.chunk, d_conv=s.d_conv)
+
+
+def spec(cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    m = dims(cfg)
+    proj_out = 2 * m["d_in"] + 2 * m["N"] + m["H"]
+    return {
+        "in_proj": P((d, proj_out), ("embed", "inner")),
+        "conv_w": P((m["d_conv"], m["conv_dim"]), ("conv", "inner"), "small"),
+        "conv_b": P((m["conv_dim"],), ("inner",), "zeros"),
+        "a_log": P((m["H"],), ("ssm_heads",), "small", 0.5),
+        "d_skip": P((m["H"],), ("ssm_heads",), "ones"),
+        "dt_bias": P((m["H"],), ("ssm_heads",), "small", 0.5),
+        "norm": P((m["d_in"],), ("inner",), "ones"),
+        "out_proj": P((m["d_in"], d), ("inner", "embed_r")),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array,
+                 init_state: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv. u: (B, L, C); w: (K, C); returns (B, L, C)."""
+    K = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    else:
+        pad = init_state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    out = jnp.zeros_like(u, dtype=F32)
+    for i in range(K):
+        out = out + up[:, i:i + u.shape[1]].astype(F32) * w[i].astype(F32)
+    return jax.nn.silu(out + b.astype(F32)).astype(u.dtype)
+
+
+def _segsum_chunk(dA: jax.Array) -> jax.Array:
+    """dA: (..., Q) -> (..., Q, Q) with out[i,j] = sum_{r=j+1..i} dA_r (i>=j)."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]             # sum_{j+1..i}
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, bm: jax.Array,
+                cm: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    B, L, H, Pd = x.shape
+    N = bm.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    xf = x.astype(F32).reshape(B, nc, Q, H, Pd)
+    dtf = dt.astype(F32).reshape(B, nc, Q, H)
+    bf = bm.astype(F32).reshape(B, nc, Q, N)
+    cf = cm.astype(F32).reshape(B, nc, Q, N)
+    dA = dtf * a.astype(F32)                               # (B,nc,Q,H)
+
+    # --- within-chunk (dual / quadratic form) ---
+    seg = _segsum_chunk(jnp.moveaxis(dA, -1, -2))          # (B,nc,H,Q,Q)
+    decay = jnp.exp(seg)
+    scores = jnp.einsum("bcqn,bckn->bcqk", cf, bf)         # (B,nc,Q,Q)
+    att = scores[:, :, None] * decay                       # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp", att, dtf, xf)
+
+    # --- chunk states ---
+    cum = jnp.cumsum(dA, axis=2)                           # (B,nc,Q,H)
+    total = cum[:, :, -1:]                                 # (B,nc,1,H)
+    decay_to_end = jnp.exp(total - cum)                    # (B,nc,Q,H)
+    chunk_states = jnp.einsum("bcqh,bcqh,bcqn,bcqhp->bchpn",
+                              decay_to_end, dtf, bf, xf)   # (B,nc,H,P,N)
+
+    # --- inter-chunk recurrence (scan over chunks) ---
+    chunk_decay = jnp.exp(total[:, :, 0])                  # (B,nc,H)
+    h0 = (jnp.zeros((B, H, Pd, N), F32) if init_state is None
+          else init_state.astype(F32))
+
+    def body(h, inp):
+        cd, cs = inp                                       # (B,H), (B,H,P,N)
+        h_out = h                                          # state entering chunk
+        h_new = h * cd[..., None, None] + cs
+        return h_new, h_out
+
+    hs_final, h_prevs = jax.lax.scan(
+        body, h0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(chunk_states, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                  # (B,nc,H,P,N)
+
+    # --- off-chunk contribution ---
+    state_decay = jnp.exp(cum)                             # decay from chunk start
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", cf, state_decay, h_prevs)
+
+    y = (y_diag + y_off).reshape(B, L, H, Pd)
+    return y.astype(x.dtype), hs_final
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
+                    a: jax.Array, bm: jax.Array, cm: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One-token recurrence. state (B,H,P,N); x (B,H,P); dt (B,H);
+    bm/cm (B,N). Returns (y (B,H,P), new_state)."""
+    dA = jnp.exp(dt.astype(F32) * a.astype(F32))           # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt.astype(F32), bm.astype(F32),
+                     x.astype(F32))
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, cm.astype(F32))
+    return y.astype(x.dtype), new_state
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jax.Array):
+    m = dims(cfg)
+    z, xin, bc, dt = jnp.split(
+        zxbcdt, [m["d_in"], 2 * m["d_in"], 2 * m["d_in"] + 2 * m["N"]],
+        axis=-1)
+    return z, xin, bc, dt
+
+
+def apply_full(p: Dict, cfg: ArchConfig, x: jax.Array, *,
+               return_cache: bool = False
+               ) -> Tuple[jax.Array, Optional[SSMCache]]:
+    """Full-sequence SSD block. x: (B, S, d)."""
+    m = dims(cfg)
+    B, S, d = x.shape
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"],
+                        preferred_element_type=F32).astype(x.dtype)
+    z, xin, bc, dt_raw = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xin = conv_out[..., :m["d_in"]]
+    bm = conv_out[..., m["d_in"]:m["d_in"] + m["N"]]
+    cm = conv_out[..., m["d_in"] + m["N"]:]
+    dt = jax.nn.softplus(dt_raw.astype(F32) + p["dt_bias"].astype(F32))
+    a = -jnp.exp(p["a_log"].astype(F32))
+    xh = xin.reshape(B, S, m["H"], m["P"])
+    y, final_state = ssd_chunked(xh, dt, a, bm, cm, m["Q"])
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, m["d_in"])
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(F32)).astype(x.dtype),
+                       cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"],
+                     preferred_element_type=layers.reduce_dtype()
+                     ).astype(x.dtype)
+    cache = None
+    if return_cache:
+        conv_tail = conv_in[:, S - (m["d_conv"] - 1):, :]
+        cache = SSMCache(conv=conv_tail, state=final_state)
+    return out, cache
+
+
+def apply_decode(p: Dict, cfg: ArchConfig, x: jax.Array, cache: SSMCache
+                 ) -> Tuple[jax.Array, SSMCache]:
+    """One-token decode. x: (B, 1, d)."""
+    m = dims(cfg)
+    B = x.shape[0]
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"],
+                        preferred_element_type=F32).astype(x.dtype)
+    z, xin, bc, dt_raw = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)          # (B,1,conv_dim)
+    full = jnp.concatenate([cache.conv, conv_in], axis=1)  # (B,d_conv,cd)
+    w, b = p["conv_w"], p["conv_b"]
+    co = (full.astype(F32) * w.astype(F32)[None]).sum(axis=1) + b.astype(F32)
+    co = jax.nn.silu(co).astype(x.dtype)                   # (B, conv_dim)
+    xin1 = co[:, :m["d_in"]].reshape(B, m["H"], m["P"])
+    bm1 = co[:, m["d_in"]:m["d_in"] + m["N"]]
+    cm1 = co[:, m["d_in"] + m["N"]:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(F32) + p["dt_bias"].astype(F32))
+    a = -jnp.exp(p["a_log"].astype(F32))
+    y, new_state = ssd_decode_step(cache.state, xin1, dt, a, bm1, cm1)
+    y = y + xin1 * p["d_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(B, 1, m["d_in"])
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(F32)).astype(x.dtype),
+                       cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"],
+                     preferred_element_type=F32).astype(x.dtype)
+    new_conv = full[:, 1:, :]
+    return out, SSMCache(conv=new_conv, state=new_state)
+
+
+def init_cache_shapes(cfg: ArchConfig, batch: int):
+    m = dims(cfg)
+    return {
+        "conv": ((batch, m["d_conv"] - 1, m["conv_dim"]),
+                 ("batch", None, "inner")),
+        "state": ((batch, m["H"], m["P"], m["N"]),
+                  ("batch", "ssm_heads", None, None)),
+    }

@@ -1,0 +1,149 @@
+"""Step functions for the LM role of every architecture: train (next-token),
+prefill, and one-token decode.  These are what the multi-pod dry-run lowers
+for the 40 (arch × shape) pairs; the flow-RL steps (the paper's pipeline)
+live in ``repro.core.trainers`` and reuse the same backbones.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.config import ArchConfig, InputShape, OptimConfig, RunConfig
+from repro.models import params as params_lib
+from repro.models.backbone import Backbone
+from repro.models.layers import chunked_ce_loss
+
+F32 = jnp.float32
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: optim.AdamWState
+
+
+# ---------------------------------------------------------------------------
+# Shape policy
+# ---------------------------------------------------------------------------
+
+def effective_window(cfg: ArchConfig, shape: InputShape) -> int:
+    """Sliding-window policy: full attention everywhere except long_500k,
+    where attention archs switch to their sliding-window variant (the
+    sub-quadratic requirement); SSM archs have no attention at all."""
+    if cfg.family == "ssm":
+        return 0
+    if shape.seq_len > 65536 and shape.kind in ("decode", "prefill"):
+        return cfg.window or 8192
+    return 0
+
+
+def effective_cache_len(cfg: ArchConfig, shape: InputShape) -> int:
+    w = effective_window(cfg, shape)
+    return min(shape.seq_len, w) if w else shape.seq_len
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.bfloat16):
+    return params_lib.init(Backbone(cfg).spec(), key, dtype)
+
+
+def init_caches(cfg: ArchConfig, batch: int, cache_len: int,
+                dtype=jnp.bfloat16):
+    model = Backbone(cfg)
+    spec = model.cache_specs(batch, cache_len)
+    return jax.tree.map(
+        lambda sa: jnp.zeros(sa[0], dtype), spec,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple))
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptimConfig, *,
+                    window: int = 0, remat: bool = True):
+    model = Backbone(cfg)
+    lr_fn = optim.make_schedule(opt_cfg)
+    n_pre = model.n_prefix
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        def loss_fn(p):
+            x = model.embed_inputs(p, batch["tokens"],
+                                   batch.get("prefix_embed"))
+            hidden, _, aux = model.forward_embeds(
+                p, x, causal=True, window=window, remat=remat)
+            if n_pre:
+                hidden = hidden[:, n_pre:]
+            ce = chunked_ce_loss(hidden, model.head_matrix(p),
+                                 batch["labels"])
+            total = ce + sum(aux.values()) if aux else ce
+            return total, (ce, aux)
+
+        (total, (ce, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params)
+        grads, gnorm = optim.clip_by_global_norm(grads, opt_cfg.grad_clip)
+        lr = lr_fn(state.opt.step)
+        new_p, new_opt = optim.adamw_update(state.params, grads, state.opt,
+                                            opt_cfg, lr)
+        metrics = {"loss": total, "ce": ce, "grad_norm": gnorm, "lr": lr}
+        metrics.update(aux)
+        return TrainState(new_p, new_opt), metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ArchConfig, *, window: int = 0):
+    model = Backbone(cfg)
+
+    def prefill_step(p, batch: Dict[str, jax.Array]):
+        x = model.embed_inputs(p, batch["tokens"], batch.get("prefix_embed"))
+        hidden, caches, _ = model.forward_embeds(
+            p, x, causal=True, window=window, return_caches=True)
+        last_logits = model.logits(p, hidden[:, -1])
+        return last_logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, *, window: int = 0):
+    model = Backbone(cfg)
+
+    def decode_step(p, caches, token: jax.Array, pos: jax.Array):
+        """token: (B, 1) int32; pos: scalar int32 absolute position."""
+        x = model.embed_inputs(p, token)
+        hidden, caches = model.decode_embeds(p, x, caches, pos, window=window)
+        logits = model.logits(p, hidden[:, -1])
+        return logits, caches
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Synthetic batches (smoke tests / examples)
+# ---------------------------------------------------------------------------
+
+def synthetic_batch(cfg: ArchConfig, batch: int, seq: int, key: jax.Array
+                    ) -> Dict[str, jax.Array]:
+    kt, kp = jax.random.split(key)
+    out = {
+        "tokens": jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size,
+                                     jnp.int32),
+    }
+    out["labels"] = jnp.roll(out["tokens"], -1, axis=1)
+    if cfg.frontend.kind != "none":
+        out["prefix_embed"] = jax.random.normal(
+            kp, (batch, cfg.frontend.n_tokens, cfg.frontend.embed_dim),
+            jnp.float32).astype(jnp.bfloat16)
+    return out

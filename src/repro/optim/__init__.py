@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import make_schedule
+from repro.optim.clip import global_norm, clip_by_global_norm
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "make_schedule",
+           "global_norm", "clip_by_global_norm"]

@@ -1,0 +1,20 @@
+"""Gradient clipping utilities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    sq = sum(jnp.sum(l.astype(F32) ** 2) for l in leaves)
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale).astype(g.dtype),
+                        tree), gn

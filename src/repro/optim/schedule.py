@@ -1,0 +1,28 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import OptimConfig
+
+F32 = jnp.float32
+
+
+def make_schedule(cfg: OptimConfig):
+    """Returns lr(step) -> scalar f32."""
+    if cfg.schedule == "constant":
+        return lambda step: jnp.asarray(cfg.lr, F32)
+
+    if cfg.schedule == "warmup_cosine":
+        def lr(step):
+            s = step.astype(F32) if hasattr(step, "astype") else float(step)
+            s = s + 1.0            # step counter is 0-based; never emit lr=0
+            warm = jnp.minimum(s / max(cfg.warmup_steps, 1), 1.0)
+            prog = jnp.clip((s - cfg.warmup_steps)
+                            / max(cfg.total_steps - cfg.warmup_steps, 1),
+                            0.0, 1.0)
+            cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+            return cfg.lr * warm * (0.1 + 0.9 * cos)
+        return lr
+
+    raise ValueError(f"unknown schedule {cfg.schedule}")

@@ -1,0 +1,97 @@
+"""Global component registry — the paper's §2.1 contribution.
+
+Flow-Factory decouples Models (adapters), Trainers (algorithms), Rewards and
+Schedulers behind a single plug-and-play registry.  Components register
+themselves under a (kind, name) key; anything registered can be instantiated
+from configuration alone, so any (model × algorithm × reward × scheduler)
+combination is reachable without code changes — O(M+N) integration cost.
+
+Usage::
+
+    @register("trainer", "flow_grpo")
+    class FlowGRPOTrainer(BaseTrainer): ...
+
+    trainer_cls = lookup("trainer", cfg.trainer_type)
+    trainer = build("trainer", cfg.trainer_type, model=model, **cfg.trainer_args)
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterable, Tuple
+
+# kind -> name -> class/factory
+_REGISTRY: Dict[str, Dict[str, Any]] = {}
+
+KINDS = ("adapter", "trainer", "reward", "scheduler", "arch", "frontend",
+         "aggregator", "optimizer", "dataset")
+
+
+class RegistryError(KeyError):
+    pass
+
+
+def register(kind: str, name: str, *, override: bool = False) -> Callable:
+    """Class decorator registering ``cls`` under ``(kind, name)``."""
+    if kind not in KINDS:
+        raise RegistryError(f"unknown registry kind {kind!r}; kinds={KINDS}")
+
+    def deco(obj: Any) -> Any:
+        bucket = _REGISTRY.setdefault(kind, {})
+        if name in bucket and not override and bucket[name] is not obj:
+            raise RegistryError(f"{kind}:{name} already registered")
+        bucket[name] = obj
+        # attach identity so components can introspect their registry key
+        try:
+            obj.registry_kind = kind
+            obj.registry_name = name
+        except (AttributeError, TypeError):  # e.g. functools.partial
+            pass
+        return obj
+
+    return deco
+
+
+_AUTOLOADED = False
+
+
+def _autoload() -> None:
+    """Import every registering module (lazy — keeps `import repro` free of
+    jax initialization so XLA_FLAGS can still be set by launchers)."""
+    global _AUTOLOADED
+    if _AUTOLOADED:
+        return
+    _AUTOLOADED = True
+    import importlib
+    for mod in ("repro.core.schedulers", "repro.core.trainers",
+                "repro.core.rewards", "repro.models.flow",
+                "repro.models.frontends"):
+        importlib.import_module(mod)
+
+
+def lookup(kind: str, name: str) -> Any:
+    if name not in _REGISTRY.get(kind, {}):
+        _autoload()
+    try:
+        return _REGISTRY[kind][name]
+    except KeyError:
+        avail = sorted(_REGISTRY.get(kind, {}))
+        raise RegistryError(
+            f"no {kind!r} named {name!r}; available: {avail}") from None
+
+
+def build(kind: str, name: str, *args: Any, **kwargs: Any) -> Any:
+    """Instantiate a registered component."""
+    return lookup(kind, name)(*args, **kwargs)
+
+
+def names(kind: str) -> Tuple[str, ...]:
+    _autoload()
+    return tuple(sorted(_REGISTRY.get(kind, {})))
+
+
+def items(kind: str) -> Iterable[Tuple[str, Any]]:
+    _autoload()
+    return sorted(_REGISTRY.get(kind, {}).items())
+
+
+def is_registered(kind: str, name: str) -> bool:
+    return name in _REGISTRY.get(kind, {})

@@ -1,0 +1,16 @@
+import os
+
+# smoke tests / benches must see ONE device (the dry-run sets its own flags
+# in a fresh subprocess); keep kernels on the jnp reference path by default —
+# kernel tests opt into interpret mode explicitly.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,59 @@
+"""Preprocessing-based memory optimization tests (paper §2.2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.preprocess import (ConditionProvider, FrozenTextEncoder,
+                                   PreprocessCache, preprocess_dataset)
+from repro.data import synthetic_prompts
+
+ENC_KW = dict(cond_dim=32, cond_len=4, vocab=256, hidden=64)
+
+
+def test_cache_roundtrip(tmp_path):
+    cache = PreprocessCache(str(tmp_path))
+    arr = {"cond": np.random.randn(4, 32).astype(np.float32),
+           "pooled": np.random.randn(32).astype(np.float32)}
+    cache.put("a fox in watercolor", arr)
+    assert cache.has("a fox in watercolor")
+    back = cache.get("a fox in watercolor")
+    np.testing.assert_array_equal(back["cond"], arr["cond"])
+
+
+def test_cached_equals_fresh(tmp_path):
+    """Phase-1 cached embeddings are bit-identical to live encoding — the
+    optimization never changes training inputs."""
+    prompts = synthetic_prompts(8)
+    cache = PreprocessCache(str(tmp_path))
+    n = preprocess_dataset(prompts, cache, encoder=FrozenTextEncoder(**ENC_KW))
+    assert n == 8
+    cached = ConditionProvider(preprocessing=True, cache=cache)
+    live = ConditionProvider(preprocessing=False, encoder_kw=ENC_KW)
+    a = cached.get(prompts[:4])
+    b = live.get(prompts[:4])
+    np.testing.assert_allclose(np.asarray(a["cond"]), np.asarray(b["cond"]),
+                               rtol=1e-6)
+
+
+def test_offload_guarantee(tmp_path):
+    """With preprocessing on, the frozen encoder is NEVER instantiated."""
+    prompts = synthetic_prompts(4)
+    cache = PreprocessCache(str(tmp_path))
+    preprocess_dataset(prompts, cache, encoder=FrozenTextEncoder(**ENC_KW))
+    provider = ConditionProvider(preprocessing=True, cache=cache)
+    provider.get(prompts)
+    provider.get(prompts)
+    assert not provider.encoder_resident
+    assert provider.resident_param_bytes == 0
+    baseline = ConditionProvider(preprocessing=False, encoder_kw=ENC_KW)
+    baseline.get(prompts)
+    assert baseline.encoder_resident
+    assert baseline.resident_param_bytes > 0
+
+
+def test_preprocess_is_resumable(tmp_path):
+    prompts = synthetic_prompts(6)
+    cache = PreprocessCache(str(tmp_path))
+    enc = FrozenTextEncoder(**ENC_KW)
+    assert preprocess_dataset(prompts[:3], cache, encoder=enc) == 3
+    assert preprocess_dataset(prompts, cache, encoder=enc) == 3  # only new

@@ -1,0 +1,106 @@
+"""Hypothesis property tests over the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import registry
+from repro.core.rewards import group_normalize
+from repro.core.schedulers import build as build_sched
+from repro.kernels import ref
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(1, 6), st.integers(2, 8), st.floats(0.1, 10.0),
+       st.floats(-5.0, 5.0), st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_group_normalize_invariants(groups, gsize, scale, shift, seed):
+    """Group-normalized advantages: zero group mean; invariant to per-group
+    affine reward transforms (the GRPO scale-robustness property)."""
+    r = jax.random.normal(jax.random.PRNGKey(seed), (groups * gsize,))
+    z1 = group_normalize(r, gsize)
+    z2 = group_normalize(r * scale + shift, gsize)
+    np.testing.assert_allclose(np.asarray(z1.reshape(groups, gsize).mean(1)),
+                               0.0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(z2), atol=1e-3)
+
+
+@given(st.floats(0.01, 0.5), st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_ratio_clip_bounds(clip, seed):
+    """Clipped objective is bounded by |adv|·(1+clip) wherever the advantage
+    is positive (the PPO pessimism property)."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    lpn = jax.random.normal(k1, (64,))
+    lpo = jax.random.normal(k2, (64,))
+    adv = jnp.abs(jax.random.normal(k3, (64,)))
+    loss, _ = ref.grpo_loss_ref(lpn, lpo, adv, clip=clip)
+    assert bool(jnp.all(-loss <= adv * (1.0 + clip) + 1e-5))
+
+
+@given(st.sampled_from(["flow_sde", "dance_sde", "cps"]),
+       st.floats(0.1, 0.9), st.integers(2, 16), st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_scheduler_logprob_consistency(name, eta, steps, seed):
+    s = build_sched(name, eta)
+    ts = s.timesteps(steps)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k1, (2, 4))
+    v = jax.random.normal(k2, (2, 4)) * 0.5
+    i = seed % steps
+    x_next, lp = s.step(v, x, ts[i], ts[i + 1], k3)
+    lp2 = s.logprob(v, x, ts[i], ts[i + 1], x_next)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lp2),
+                               rtol=1e-4, atol=1e-3)
+    assert bool(jnp.all(jnp.isfinite(x_next)))
+
+
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(8, 32),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_ssd_scan_chaining_property(B, H, L2, seed):
+    """Chunked SSD over [a; b] == scan(a) then scan(b, init=state(a)) — the
+    invariant sequence-parallel sharding relies on."""
+    L = 2 * L2
+    P, N = 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.2)
+    bm = jax.random.normal(ks[3], (B, L, N)) * 0.3
+    cm = jax.random.normal(ks[4], (B, L, N)) * 0.3
+    y_full, h_full = ref.ssd_scan_ref(x, dt, a, bm, cm)
+    y1, h1 = ref.ssd_scan_ref(x[:, :L2], dt[:, :L2], a, bm[:, :L2],
+                              cm[:, :L2])
+    y2, h2 = ref.ssd_scan_ref(x[:, L2:], dt[:, L2:], a, bm[:, L2:],
+                              cm[:, L2:], init_state=h1)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               atol=1e-3, rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full[:, L2:]),
+                               atol=1e-3, rtol=1e-2)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 64))
+@settings(max_examples=10, deadline=None)
+def test_rope_relative_position_property(seed, shift):
+    """RoPE attention scores depend only on relative positions: shifting all
+    positions by a constant leaves q·k unchanged."""
+    from repro.models.layers import apply_rope
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    q = jax.random.normal(k1, (1, 8, 2, 32))
+    k = jax.random.normal(k2, (1, 8, 2, 32))
+    pos = jnp.arange(8)
+    s0 = jnp.einsum("bshd,bthd->bsth", apply_rope(q, pos, 1e4),
+                    apply_rope(k, pos, 1e4))
+    s1 = jnp.einsum("bshd,bthd->bsth", apply_rope(q, pos + shift, 1e4),
+                    apply_rope(k, pos + shift, 1e4))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=1e-3)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_registry_idempotent_lookup(seed):
+    for kind in ("trainer", "scheduler", "reward", "aggregator"):
+        for name in registry.names(kind):
+            assert registry.lookup(kind, name) is registry.lookup(kind, name)

@@ -1,0 +1,84 @@
+"""SDE scheduler unit tests (paper Table 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import registry
+from repro.core import schedulers
+
+KEY = jax.random.PRNGKey(11)
+ALL = ["flow_sde", "dance_sde", "cps", "ode"]
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_registered_and_buildable(name):
+    s = schedulers.build(name, eta=0.5)
+    ts = s.timesteps(8)
+    assert ts.shape == (9,)
+    assert bool(jnp.all(ts[:-1] > ts[1:]))           # descending
+    assert float(ts[0]) <= 1.0 and float(ts[-1]) >= 0.0
+
+
+@pytest.mark.parametrize("name", ["flow_sde", "dance_sde", "cps"])
+def test_logprob_matches_step_sample(name):
+    """log p(x_next | x) recomputed equals the density of the transition the
+    sampler actually took (the GRPO ratio=1 identity at rollout params)."""
+    s = schedulers.build(name, eta=0.5)
+    x = jax.random.normal(KEY, (4, 8))
+    v = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
+    t, t_next = jnp.float32(0.7), jnp.float32(0.6)
+    x_next, logp = s.step(v, x, t, t_next, jax.random.PRNGKey(2))
+    logp2 = s.logprob(v, x, t, t_next, x_next)
+    np.testing.assert_allclose(logp, logp2, rtol=1e-5, atol=1e-4)
+
+
+def test_ode_is_deterministic_and_matches_euler():
+    s = schedulers.build("ode", eta=0.0)
+    x = jax.random.normal(KEY, (3, 5))
+    v = jax.random.normal(jax.random.PRNGKey(1), (3, 5))
+    t, t_next = jnp.float32(0.5), jnp.float32(0.4)
+    x1, lp = s.step(v, x, t, t_next, jax.random.PRNGKey(2))
+    x2, _ = s.step(v, x, t, t_next, jax.random.PRNGKey(99))
+    np.testing.assert_allclose(x1, x2)               # key-independent
+    np.testing.assert_allclose(x1, x - v * (t - t_next), rtol=1e-6)
+    np.testing.assert_allclose(lp, 0.0)
+
+
+def test_flow_sde_sigma_shape():
+    s = schedulers.build("flow_sde", eta=0.7)
+    # σ grows toward t=1 (exploration early in sampling)
+    assert float(s.sigma(0.9, 0.8)) > float(s.sigma(0.2, 0.1))
+    np.testing.assert_allclose(float(s.sigma(0.5, 0.4)), 0.7, rtol=1e-5)
+
+
+def test_dance_sigma_constant():
+    s = schedulers.build("dance_sde", eta=0.3)
+    assert float(s.sigma(0.9, 0.8)) == pytest.approx(0.3)
+    assert float(s.sigma(0.1, 0.05)) == pytest.approx(0.3)
+
+
+def test_cps_preserves_marginal_coefficients():
+    """CPS: with exact rectified-flow inputs (x_t = (1-t)x0 + t·eps and the
+    true velocity), the sampled x_next keeps the marginal decomposition
+    (1-t')x0 + t'·(unit-variance noise) — coefficients preserved."""
+    s = schedulers.build("cps", eta=0.5)
+    n = 20000
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x0 = jax.random.normal(k1, (n, 1)) * 0.0 + 1.0   # constant data point
+    eps = jax.random.normal(k2, (n, 1))
+    t, t_next = jnp.float32(0.7), jnp.float32(0.5)
+    x_t = (1 - t) * x0 + t * eps
+    v = eps - x0                                      # true velocity
+    x_next, _ = s.step(v, x_t, t, t_next, k3)
+    noise = (x_next - (1 - t_next) * x0) / t_next
+    assert abs(float(noise.mean())) < 0.02
+    assert abs(float(noise.std()) - 1.0) < 0.02
+
+
+def test_mixed_mask_zeroes_ode_logps():
+    from repro.core.rollout import mix_sde_mask
+    m = mix_sde_mask(10, 2, shift=0)
+    assert m.sum() == 2 and bool(m[0]) and bool(m[1]) and not bool(m[2])
+    m2 = mix_sde_mask(10, 2, shift=3)
+    assert bool(m2[3]) and bool(m2[4]) and m2.sum() == 2

@@ -1,0 +1,108 @@
+"""Substrate tests: optimizer, schedules, checkpointing, data, config IO,
+registry errors."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint, optim, registry
+from repro.config import (FlowRLConfig, OptimConfig, RunConfig, from_dict,
+                          to_dict)
+from repro.data import PromptDataset, TokenStream, synthetic_prompts
+
+KEY = jax.random.PRNGKey(9)
+
+
+def test_adamw_matches_manual():
+    cfg = OptimConfig(lr=0.1, betas=(0.9, 0.999), eps=1e-8, weight_decay=0.0)
+    p = {"w": jnp.asarray([1.0, 2.0])}
+    g = {"w": jnp.asarray([0.5, -0.5])}
+    st = optim.adamw_init(p)
+    p2, st2 = optim.adamw_update(p, g, st, cfg, jnp.float32(0.1))
+    m = 0.1 * 0.5
+    v = 0.001 * 0.25
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.999)
+    want = 1.0 - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(float(p2["w"][0]), want, rtol=1e-5)
+    assert int(st2.step) == 1
+
+
+def test_weight_decay_shrinks():
+    cfg = OptimConfig(lr=0.1, weight_decay=0.1)
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.zeros((4,))}
+    st = optim.adamw_init(p)
+    p2, _ = optim.adamw_update(p, g, st, cfg, jnp.float32(0.1))
+    assert float(p2["w"][0]) < 1.0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((3,)) * 3.0, "b": jnp.ones((4,)) * 4.0}
+    clipped, gn = optim.clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(gn), np.sqrt(9 * 3 + 16 * 4), rtol=1e-5)
+    np.testing.assert_allclose(float(optim.global_norm(clipped)), 1.0,
+                               rtol=1e-4)
+
+
+def test_schedule_warmup_cosine():
+    cfg = OptimConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lr = optim.make_schedule(cfg)
+    assert float(lr(jnp.int32(0))) == pytest.approx(0.1)   # never zero
+    assert float(lr(jnp.int32(9))) == pytest.approx(1.0, rel=1e-3)
+    assert float(lr(jnp.int32(99))) == pytest.approx(0.1, rel=1e-2)
+    assert float(lr(jnp.int32(50))) < float(lr(jnp.int32(20)))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.float32),
+                       "step": jnp.int32(7)}}
+    checkpoint.save_checkpoint(str(tmp_path), 3, tree)
+    assert checkpoint.latest_step(str(tmp_path)) == 3
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    back = checkpoint.load_checkpoint(str(tmp_path), 3, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_token_stream_learnable():
+    ts = TokenStream(64, batch=4, seq=32, seed=0)
+    b = next(ts.batches())
+    assert b["tokens"].shape == (4, 32)
+    # labels are next tokens
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+def test_prompt_dataset_sharding():
+    prompts = synthetic_prompts(20)
+    d0 = PromptDataset(prompts, 2, host_id=0, n_hosts=2)
+    d1 = PromptDataset(prompts, 2, host_id=1, n_hosts=2)
+    assert len(d0) + len(d1) == 20
+    assert set(d0.prompts).isdisjoint(d1.prompts)
+
+
+def test_config_dict_roundtrip():
+    cfg = RunConfig()
+    d = to_dict(cfg)
+    back = from_dict(RunConfig, d)
+    assert back == cfg
+
+
+def test_registry_error_lists_available():
+    import repro.core  # noqa: F401  (registers trainers)
+    with pytest.raises(registry.RegistryError) as e:
+        registry.lookup("trainer", "nope")
+    assert "flow_grpo" in str(e.value)
+
+
+def test_registry_rejects_duplicates():
+    @registry.register("aggregator", "dup_test_agg")
+    def f(*a):
+        return None
+    with pytest.raises(registry.RegistryError):
+        @registry.register("aggregator", "dup_test_agg")
+        def g(*a):
+            return None
