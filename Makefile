@@ -1,0 +1,27 @@
+# Tier-1 verification: dependency hygiene + the full test suite.
+#
+#   make verify      - what CI runs; catches the dacite-class regression
+#                      (a third-party import sneaking into the core path)
+#   make smoke       - 2-step end-to-end training run through the Experiment
+#                      front door (launch CLI + config-file path)
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: verify deps-check test smoke
+
+verify: deps-check test
+
+# Core modules must import on a bare jax+numpy interpreter: no dacite, and
+# zstandard/msgpack/hypothesis only ever loaded behind soft gates.
+deps-check:
+	$(PY) scripts/check_deps.py
+
+test:
+	$(PY) -m pytest -x -q
+
+smoke:
+	$(PY) -m repro.launch.train --reduced --steps 2 \
+	    --set flow.num_steps=2 --set flow.group_size=2 \
+	    --set flow.cache_dir=/tmp/repro-smoke/cache \
+	    --set loop.ckpt_dir=/tmp/repro-smoke/ckpt

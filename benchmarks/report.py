@@ -1,5 +1,5 @@
 """Generates the EXPERIMENTS.md §Dry-run and §Roofline tables from the
-dry-run artifacts.  Run after `python -m repro.launch.sweep`:
+dry-run artifacts.  Run after `python -m repro.launch.sweep --mode dryrun`:
 
     PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
 """

@@ -1,45 +1,47 @@
 """Multi-reward training example (paper §2.3): pointwise + groupwise rewards
-sharing one frozen backbone (deduplicated), compared under weighted_sum vs
-GDPO advantage aggregation.
+sharing one frozen backbone (deduplicated by ``model_id``), compared under
+weighted_sum vs GDPO advantage aggregation — the aggregator is a single
+dotted override on the same Experiment config.
 
   PYTHONPATH=src python examples/multi_reward.py
 """
-import jax
 import numpy as np
 
-from repro import configs, registry
-from repro.config import FlowRLConfig, OptimConfig, RewardSpec
+from repro.api import Experiment, apply_overrides
+from repro.config import (DataConfig, FlowRLConfig, LoopConfig, OptimConfig,
+                          RewardSpec, RunConfig)
 
-key = jax.random.PRNGKey(0)
-arch = configs.get_reduced("flux_dit")
-opt = OptimConfig(lr=3e-4, total_steps=15, warmup_steps=2)
-cond = jax.random.normal(key, (2, 4, 512))
-
-REWARDS = (
-    # pointwise preference scorer
-    RewardSpec("pickscore", 0.5, model_id="pickscore-base",
-               args={"latent_dim": 8}),
-    # groupwise pairwise-preference reward SHARING the same frozen backbone
-    RewardSpec("pref_group", 0.5, model_id="pickscore-base",
-               args={"latent_dim": 8}),
-    # task reward + regularizer
-    RewardSpec("text_render", 1.0, args={"latent_dim": 8,
-                                         "latent_tokens": 8}),
-    RewardSpec("latent_norm", 0.1),
-)
+BASE = RunConfig(
+    arch="flux_dit", reduced=True,
+    flow=FlowRLConfig(
+        num_steps=4, group_size=4, latent_tokens=8, latent_dim=8,
+        rewards=(
+            # pointwise preference scorer
+            RewardSpec("pickscore", 0.5, model_id="pickscore-base"),
+            # groupwise pairwise-preference reward SHARING the same backbone
+            RewardSpec("pref_group", 0.5, model_id="pickscore-base"),
+            # task reward + regularizer (latent geometry auto-completed)
+            RewardSpec("text_render", 1.0),
+            RewardSpec("latent_norm", 0.1)),
+        preprocessing=True, cache_dir="cache/multi_reward"),
+    optim=OptimConfig(lr=3e-4, total_steps=15, warmup_steps=2),
+    data=DataConfig(n_prompts=16, batch_prompts=2,
+                    encoder=dict(cond_dim=64, cond_len=4, vocab=512,
+                                 hidden=128)),
+    loop=LoopConfig(steps=15, log_every=0, save_every=0, resume=False))
 
 for agg in ("weighted_sum", "gdpo"):
-    flow = FlowRLConfig(num_steps=4, group_size=4, latent_tokens=8,
-                        latent_dim=8, advantage_agg=agg, rewards=REWARDS)
-    tr = registry.build("trainer", "flow_grpo", arch, flow, opt, key=key)
-    print(f"\n[{agg}] 4 reward configs -> {tr.loader.unique_loads} unique "
-          "frozen models loaded (deduplication)")
-    hist = []
-    for it in range(15):
-        m = tr.step(cond, key, it=it)
-        hist.append(float(m["reward_mean"]))
-        if it % 5 == 0:
-            per = {k.split('/')[-1]: round(float(v), 3)
-                   for k, v in m.items() if k.startswith("reward/")}
-            print(f"  step {it:3d} total={hist[-1]:+.4f} per-reward={per}")
-    print(f"  gain: {np.mean(hist[-3:]) - np.mean(hist[:3]):+.4f}")
+    exp = Experiment.from_config(
+        apply_overrides(BASE, [f"flow.advantage_agg={agg}"]))
+    trainer = exp.build_trainer()
+    print(f"\n[{agg}] {len(exp.flow.rewards)} reward configs -> "
+          f"{trainer.loader.unique_loads} unique frozen models loaded "
+          "(deduplication)")
+    hist = exp.train()["history"]
+    for row in hist[::5] + [hist[-1]]:
+        per = {k.split('/')[-1]: round(v, 3) for k, v in row.items()
+               if k.startswith("reward/")}
+        print(f"  step {row['step']:3d} total={row['reward']:+.4f} "
+              f"per-reward={per}")
+    rewards = [r["reward"] for r in hist]
+    print(f"  gain: {np.mean(rewards[-3:]) - np.mean(rewards[:3]):+.4f}")

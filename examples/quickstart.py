@@ -1,46 +1,37 @@
-"""Quickstart: the paper's registry workflow in ~40 lines.
+"""Quickstart: one declarative config is the whole experiment.
 
-Builds a flow-matching policy over any backbone in the zoo, picks an RL
-algorithm + SDE dynamics + rewards purely by name, and runs a few training
-iterations on CPU.
+``RunConfig`` names every component — backbone, RL algorithm, SDE dynamics,
+rewards, dataset — by its registry name; ``Experiment`` resolves them and
+runs the shared TrainLoop (paper §2.1: any model × algorithm × reward ×
+scheduler combination from config alone, O(M+N) integration cost).
+Swapping the algorithm is a one-override change, shown at the end.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax
+from repro.api import Experiment, apply_overrides
+from repro.config import (DataConfig, FlowRLConfig, LoopConfig, OptimConfig,
+                          RewardSpec, RunConfig)
 
-from repro import configs, registry
-from repro.config import FlowRLConfig, OptimConfig, RewardSpec
+cfg = RunConfig(
+    arch="flux_dit", reduced=True,          # any zoo arch, CPU-scale variant
+    flow=FlowRLConfig(
+        trainer_type="flow_grpo",           # registry.names("trainer")
+        sde_type="flow_sde",                # registry.names("scheduler")
+        eta=0.7, num_steps=6, group_size=4,
+        latent_tokens=8, latent_dim=8,
+        advantage_agg="gdpo",               # weighted_sum | gdpo
+        rewards=(RewardSpec("text_render", 1.0),    # args auto-completed
+                 RewardSpec("latent_norm", 0.1)),
+        preprocessing=True, cache_dir="cache/quickstart"),
+    optim=OptimConfig(lr=3e-4, total_steps=10, warmup_steps=2),
+    data=DataConfig(n_prompts=16, batch_prompts=2,
+                    encoder=dict(cond_dim=64, cond_len=4, vocab=512,
+                                 hidden=128)),
+    loop=LoopConfig(steps=10, log_every=1, save_every=0, resume=False))
 
-key = jax.random.PRNGKey(0)
+result = Experiment.from_config(cfg).train()
 
-# 1. pick a backbone (any of the 10 assigned archs or the paper's DiT)
-arch = configs.get_reduced("flux_dit")
-
-# 2. configure the run — every component is selected by registry name
-flow = FlowRLConfig(
-    trainer_type="flow_grpo",       # flow_grpo | mix_grpo | grpo_guard | nft | awm
-    sde_type="flow_sde",            # flow_sde | dance_sde | cps | ode (Table 1)
-    eta=0.7, num_steps=6, group_size=4,
-    latent_tokens=8, latent_dim=8,
-    advantage_agg="gdpo",           # weighted_sum | gdpo
-    rewards=(
-        RewardSpec("text_render", 1.0,
-                   args={"latent_dim": 8, "latent_tokens": 8}),
-        RewardSpec("latent_norm", 0.1),
-    ))
-opt = OptimConfig(lr=3e-4, total_steps=20, warmup_steps=2)
-
-# 3. build the trainer from the registry and train
-trainer = registry.build("trainer", flow.trainer_type, arch, flow, opt,
-                         key=key)
-cond = jax.random.normal(key, (2, 4, 512))   # 2 prompts' cached embeddings
-
-for it in range(10):
-    metrics = trainer.step(cond, key, it=it)
-    print(f"step {it}: reward={float(metrics['reward_mean']):+.4f} "
-          f"loss={float(metrics['loss']):+.4f}")
-
-print("\nswap the algorithm with ONE config change:")
-trainer2 = registry.build("trainer", "awm", arch, flow, opt, key=key)
-m = trainer2.step(cond, key, it=0)
-print(f"awm step 0: reward={float(m['reward_mean']):+.4f}")
+print("\nswap the algorithm with ONE override:")
+exp2 = Experiment.from_config(apply_overrides(cfg, ["flow.trainer_type=awm"]))
+m = exp2.train()["history"][-1]
+print(f"awm final step: reward={m['reward']:+.4f}")

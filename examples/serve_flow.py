@@ -1,8 +1,9 @@
 """Serving example: batched flow-matching sampling with interchangeable
-backbones and solvers — the inference half of the framework.
+backbones and solvers — the inference half of the Experiment front door.
 
 Generates latents for a batch of prompt requests with (a) the paper's DiT
 and (b) an SSM backbone, under ODE and SDE solvers, and prints throughput.
+Backbone and solver are registry names on the same config.
 
   PYTHONPATH=src python examples/serve_flow.py
 """
@@ -11,26 +12,33 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import configs
-from repro.config import FlowRLConfig
-from repro.core.preprocess import ConditionProvider
+from repro.api import Experiment
+from repro.config import DataConfig, FlowRLConfig, RunConfig
 from repro.data import synthetic_prompts
-from repro.launch.serve import FlowSampler
 
-key = jax.random.PRNGKey(0)
-provider = ConditionProvider(preprocessing=False,
-                             encoder_kw=dict(cond_dim=512, cond_len=8,
-                                             vocab=4096, hidden=256))
+ENCODER = dict(cond_dim=512, cond_len=8, vocab=4096, hidden=256)
+
+
+def make_exp(arch_name: str, sde: str) -> Experiment:
+    return Experiment.from_config(RunConfig(
+        arch=arch_name, reduced=True,
+        flow=FlowRLConfig(sde_type=sde, eta=0.3, num_steps=6,
+                          latent_tokens=8, latent_dim=8,
+                          preprocessing=False),
+        data=DataConfig(encoder=ENCODER)))
+
+
 prompts = synthetic_prompts(8)
-cond = provider.get(prompts)["cond"]
+key = jax.random.PRNGKey(0)
+# the condition embeddings don't depend on backbone or solver: encode once
+cond = make_exp("flux_dit", "ode").build_provider(live=True) \
+    .get(prompts)["cond"]
 
 for arch_name in ("flux_dit", "mamba2-370m"):
     for sde in ("ode", "dance_sde"):
-        flow = FlowRLConfig(sde_type=sde, eta=0.3, num_steps=6,
-                            latent_tokens=8, latent_dim=8)
-        sampler = FlowSampler(configs.get_reduced(arch_name), flow,
-                              key=key, max_batch=4)
-        lat = sampler.serve(cond, key)           # compile
+        exp = make_exp(arch_name, sde)
+        sampler = exp.build_sampler(key, max_batch=4)
+        sampler.serve(cond, key)                     # compile
         t0 = time.perf_counter()
         lat = sampler.serve(cond, key)
         jax.block_until_ready(lat)

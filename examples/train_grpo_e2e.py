@@ -1,6 +1,7 @@
-"""End-to-end driver (deliverable b): preprocess a prompt corpus, then RL
-fine-tune a ~100M-param FLUX-style DiT with Flow-GRPO for a few hundred
-steps, with checkpointing and a reward log.
+"""End-to-end driver: preprocess a prompt corpus, then RL fine-tune a
+~100M-param FLUX-style DiT with Flow-GRPO, with full-state checkpointing
+and a reward log — all from one declarative RunConfig (the custom model
+size is plain ``arch_overrides`` data, not code).
 
 Full run (~100M params, 200 steps):
   PYTHONPATH=src python examples/train_grpo_e2e.py
@@ -8,27 +9,39 @@ CI-scale sanity run:
   PYTHONPATH=src python examples/train_grpo_e2e.py --small --steps 10
 """
 import argparse
-import dataclasses
-import json
-import os
-import time
 
-import jax
 import numpy as np
 
-from repro import checkpoint, configs, registry
-from repro.config import ArchConfig, FlowRLConfig, OptimConfig, RewardSpec
-from repro.core.preprocess import (ConditionProvider, PreprocessCache,
-                                   preprocess_dataset)
-from repro.data import PromptDataset, synthetic_prompts
+from repro.api import Experiment
+from repro.config import (DataConfig, FlowRLConfig, LoopConfig, OptimConfig,
+                          RewardSpec, RunConfig)
+
+# ~100M-param member of the paper's DiT family, declared as data
+MODEL_100M = {"n_layers": 12, "d_model": 768, "n_heads": 12,
+              "n_kv_heads": 12, "d_ff": 3072, "head_dim": 64,
+              "vocab_size": 4096}
 
 
-def model_100m() -> ArchConfig:
-    """~100M-param member of the paper's DiT family."""
-    return dataclasses.replace(
-        configs.get("flux_dit"),
-        n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
-        d_ff=3072, head_dim=64, vocab_size=4096)
+def build_config(args) -> RunConfig:
+    lat_tok, lat_dim = (8, 8) if args.small else (64, 16)
+    return RunConfig(
+        arch="flux_dit", reduced=args.small,
+        arch_overrides={} if args.small else MODEL_100M,
+        flow=FlowRLConfig(
+            trainer_type="flow_grpo", sde_type="flow_sde", eta=0.7,
+            num_steps=4 if args.small else 8,
+            group_size=4, latent_tokens=lat_tok, latent_dim=lat_dim,
+            advantage_agg="gdpo",
+            rewards=(RewardSpec("text_render", 1.0),
+                     RewardSpec("pickscore", 0.25),
+                     RewardSpec("latent_norm", 0.1)),
+            cache_dir=f"{args.out}/cache"),
+        optim=OptimConfig(lr=3e-4, total_steps=args.steps,
+                          warmup_steps=max(2, args.steps // 20)),
+        data=DataConfig(n_prompts=64, batch_prompts=4),
+        loop=LoopConfig(steps=args.steps, log_every=10, save_every=100,
+                        ckpt_dir=f"{args.out}/ckpt",
+                        log_file=f"{args.out}/reward_log.json"))
 
 
 def main() -> None:
@@ -38,56 +51,17 @@ def main() -> None:
     ap.add_argument("--out", default="experiments/e2e")
     args = ap.parse_args()
 
-    arch = configs.get_reduced("flux_dit") if args.small else model_100m()
-    lat_tok, lat_dim = (8, 8) if args.small else (64, 16)
-    flow = FlowRLConfig(
-        trainer_type="flow_grpo", sde_type="flow_sde", eta=0.7,
-        num_steps=4 if args.small else 8,
-        group_size=4, latent_tokens=lat_tok, latent_dim=lat_dim,
-        advantage_agg="gdpo",
-        rewards=(RewardSpec("text_render", 1.0,
-                            args={"latent_dim": lat_dim,
-                                  "latent_tokens": lat_tok}),
-                 RewardSpec("pickscore", 0.25,
-                            args={"latent_dim": lat_dim}),
-                 RewardSpec("latent_norm", 0.1)))
-    opt = OptimConfig(lr=3e-4, total_steps=args.steps,
-                      warmup_steps=max(2, args.steps // 20))
-    key = jax.random.PRNGKey(0)
-
-    os.makedirs(args.out, exist_ok=True)
-    prompts = synthetic_prompts(64)
-    cache = PreprocessCache(os.path.join(args.out, "cache"))
-    t0 = time.time()
-    n = preprocess_dataset(prompts, cache)
-    provider = ConditionProvider(preprocessing=True, cache=cache)
-    print(f"[phase 1] preprocessed {n} prompts in {time.time()-t0:.1f}s; "
-          "frozen encoders offloaded")
-
-    trainer = registry.build("trainer", "flow_grpo", arch, flow, opt,
-                             key=key)
-    n_params = sum(x.size for x in jax.tree.leaves(trainer.state.params))
-    print(f"[phase 2] Flow-GRPO on {arch.name} ({n_params/1e6:.1f}M params)")
-
-    ds = PromptDataset(prompts, batch_size=4)
-    log = []
-    for it, bp in zip(range(args.steps), ds.infinite()):
-        t_it = time.time()
-        cond = provider.get(bp)["cond"]
-        m = trainer.step(cond, key, it=it)
-        log.append({"step": it, "reward": float(m["reward_mean"]),
-                    "loss": float(m["loss"]),
-                    "dt": round(time.time() - t_it, 2)})
-        if it % 10 == 0 or it == args.steps - 1:
-            print(f"  step {it:4d} reward={log[-1]['reward']:+.4f} "
-                  f"dt={log[-1]['dt']}s")
-        if (it + 1) % 100 == 0:
-            checkpoint.save_checkpoint(os.path.join(args.out, "ckpt"),
-                                       it + 1, trainer.state.params)
-    with open(os.path.join(args.out, "reward_log.json"), "w") as f:
-        json.dump(log, f)
-    early = np.mean([r["reward"] for r in log[:5]])
-    late = np.mean([r["reward"] for r in log[-5:]])
+    exp = Experiment.from_config(build_config(args))
+    d = exp.describe()
+    print(f"[e2e] {d['trainer']['name']} on {d['arch']['name']} "
+          f"({d['arch']['n_params']/1e6:.1f}M params), "
+          f"rewards={d['rewards']}")
+    hist = exp.train()["history"]
+    if not hist:
+        print("[done] nothing left to train (resumed at final step)")
+        return
+    early = np.mean([r["reward"] for r in hist[:5]])
+    late = np.mean([r["reward"] for r in hist[-5:]])
     print(f"[done] reward {early:+.4f} -> {late:+.4f} "
           f"({'improved' if late > early else 'no gain'})")
 

@@ -1,0 +1,55 @@
+"""Dependency-hygiene gate (run by ``make verify``).
+
+Imports every core module and asserts that nothing outside the declared
+runtime dependency set (jax, numpy, + soft-gated zstandard/msgpack) was
+pulled in.  This is the regression class that once broke collection of the
+entire test suite (``ModuleNotFoundError: No module named 'dacite'``).
+"""
+import importlib
+import sys
+
+CORE_MODULES = [
+    "repro",
+    "repro.config",
+    "repro.registry",
+    "repro.configs",
+    "repro.api",
+    "repro.checkpoint",
+    "repro.core.preprocess",
+    "repro.data.prompts",
+    "repro.optim",
+]
+
+# third-party packages that must never be a hard requirement of the core
+# path: dropped deps (dacite), heavyweight alternatives we build from
+# scratch, and the soft-gated pair (zstandard/msgpack) whose fallback
+# branches (raw-npz cache blobs, JSON checkpoint manifests) this gate
+# forces every import to exercise
+FORBIDDEN = ["dacite", "orbax", "optax", "flax", "hypothesis", "dm_haiku",
+             "zstandard", "msgpack"]
+
+
+def main() -> int:
+    for name in FORBIDDEN:
+        sys.modules[name] = None  # type: ignore[assignment]  # force ImportError
+    failures = []
+    for mod in CORE_MODULES:
+        try:
+            importlib.import_module(mod)
+        except Exception as e:  # noqa: BLE001
+            failures.append(f"{mod}: {type(e).__name__}: {e}")
+    for name in FORBIDDEN:
+        del sys.modules[name]
+    if failures:
+        print("dependency check FAILED — core modules must import with only "
+              "jax+numpy available:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"dependency check OK: {len(CORE_MODULES)} core modules import "
+          f"without {FORBIDDEN}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,21 @@
+"""repro.api — the unified, config-first experiment layer.
+
+Everything an entry point needs comes from here:
+
+* :class:`Experiment` — ``from_config`` / ``from_file`` / ``from_cli``;
+  resolves every component through the registry and exposes ``train()``
+  (shared :class:`TrainLoop` with full-state checkpoint/resume) and
+  ``serve()`` (batched :class:`FlowSampler`).
+* :class:`TrainLoop` + the :class:`Callback` protocol (``MetricLogger``,
+  ``JSONLogSink``, ``PeriodicCheckpoint``, ``EarlyStop``).
+* :func:`apply_overrides` — dotted ``--set flow.eta=0.5`` config surgery.
+"""
+from repro.api.experiment import Experiment, default_cli_config
+from repro.api.loop import (Callback, EarlyStop, JSONLogSink, MetricLogger,
+                            PeriodicCheckpoint, TrainLoop)
+from repro.api.overrides import apply_overrides, parse_assignments
+from repro.api.serving import FlowSampler
+
+__all__ = ["Experiment", "default_cli_config", "TrainLoop", "Callback",
+           "MetricLogger", "JSONLogSink", "PeriodicCheckpoint", "EarlyStop",
+           "apply_overrides", "parse_assignments", "FlowSampler"]

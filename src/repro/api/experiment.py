@@ -1,0 +1,341 @@
+"""``Experiment`` — the config-first front door for train / serve / sweep.
+
+One declarative :class:`RunConfig` reaches every (model × algorithm × reward
+× scheduler) combination through the registry (the paper's §2.1 O(M+N)
+claim): arch (including ``reduced`` CPU variants and declarative
+``arch_overrides``), trainer, SDE scheduler, rewards, optimizer, dataset and
+the preprocessing :class:`ConditionProvider` are all resolved by name — no
+entry point hand-rolls argparse → config → loop → checkpoint anymore.
+
+    from repro.api import Experiment
+
+    exp = Experiment.from_file("run.json")          # or .from_config(cfg)
+    result = exp.train()                            # shared TrainLoop
+
+    exp = Experiment.from_cli(["--reduced", "--steps", "2",
+                               "--set", "flow.eta=0.5"])
+
+CLI flags are one ``--config`` JSON plus dotted ``--set path=value``
+overrides; the few convenience flags (``--arch/--trainer/--sde``) derive
+their choices from ``registry.names(...)`` so they can never drift from
+what is actually registered.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+
+from repro import checkpoint, registry
+from repro.api import loop as loop_lib
+from repro.api.overrides import apply_overrides, replace_fields
+from repro.api.serving import FlowSampler
+from repro.config import (ArchConfig, ConfigError, FlowRLConfig, LoopConfig,
+                          OptimConfig, RewardSpec, RunConfig, load_json,
+                          to_dict)
+from repro.core.preprocess import (ConditionProvider, PreprocessCache,
+                                   preprocess_dataset)
+
+
+def default_cli_config() -> RunConfig:
+    """CPU-friendly defaults matching the historical launcher: small latent
+    geometry, text_render reward, 100-step schedule."""
+    return RunConfig(
+        arch="flux_dit",
+        flow=FlowRLConfig(
+            num_steps=8, group_size=4, latent_tokens=16, latent_dim=8,
+            rewards=(RewardSpec("text_render", 1.0),)),
+        optim=OptimConfig(lr=3e-4, total_steps=100, warmup_steps=5),
+        loop=LoopConfig(steps=100))
+
+
+class Experiment:
+    """A fully-resolved run: config in, trained state / served latents out."""
+
+    def __init__(self, cfg: RunConfig):
+        self.cfg = cfg
+        self._arch: Optional[ArchConfig] = None
+        self._trainer = None
+        self._dataset = None
+
+    # ------------------------------------------------------------ construct
+    @classmethod
+    def from_config(cls, cfg: RunConfig, overrides: Sequence[str] = ()
+                    ) -> "Experiment":
+        if overrides:
+            cfg = apply_overrides(cfg, overrides)
+        return cls(cfg)
+
+    @classmethod
+    def from_file(cls, path: str, overrides: Sequence[str] = ()
+                  ) -> "Experiment":
+        return cls.from_config(load_json(RunConfig, path), overrides)
+
+    @classmethod
+    def cli_parser(cls, description: str = "Flow-Factory experiment"
+                   ) -> argparse.ArgumentParser:
+        """Shared parser: one config file + dotted overrides; convenience
+        flag choices are *derived* from the registry, never hard-coded."""
+        ap = argparse.ArgumentParser(description=description)
+        ap.add_argument("--config", default="",
+                        help="RunConfig JSON (default: built-in CPU profile)")
+        ap.add_argument("--arch", default=None,
+                        choices=registry.names("arch"))
+        ap.add_argument("--reduced", action="store_true",
+                        help="use the ≤2-layer reduced config (CPU-runnable)")
+        ap.add_argument("--trainer", default=None,
+                        choices=registry.names("trainer"))
+        ap.add_argument("--sde", default=None,
+                        choices=registry.names("scheduler"))
+        ap.add_argument("--steps", type=int, default=None)
+        ap.add_argument("--set", dest="overrides", action="append",
+                        default=[], metavar="DOTTED.PATH=VALUE",
+                        help="typed config override, e.g. --set flow.eta=0.5")
+        return ap
+
+    @classmethod
+    def from_args(cls, ns: argparse.Namespace,
+                  base: Optional[RunConfig] = None) -> "Experiment":
+        cfg = (load_json(RunConfig, ns.config) if ns.config
+               else (base or default_cli_config()))
+        pre: Dict[str, Any] = {}
+        if ns.arch is not None:
+            pre["arch"] = ns.arch
+        if ns.reduced:
+            pre["reduced"] = True
+        if ns.trainer is not None:
+            pre["flow.trainer_type"] = ns.trainer
+        if ns.sde is not None:
+            pre["flow.sde_type"] = ns.sde
+        if ns.steps is not None:
+            pre["loop.steps"] = ns.steps
+            pre["optim.total_steps"] = ns.steps
+            pre["optim.warmup_steps"] = max(2, ns.steps // 20)
+        cfg = apply_overrides(cfg, pre)
+        return cls.from_config(cfg, ns.overrides)
+
+    @classmethod
+    def from_cli(cls, argv: Optional[Sequence[str]] = None,
+                 base: Optional[RunConfig] = None) -> "Experiment":
+        return cls.from_args(cls.cli_parser().parse_args(argv), base)
+
+    # -------------------------------------------------------------- resolve
+    @property
+    def arch(self) -> ArchConfig:
+        if self._arch is None:
+            arch = registry.build("arch", self.cfg.arch,
+                                  reduced=self.cfg.reduced)
+            self._arch = replace_fields(arch, self.cfg.arch_overrides)
+        return self._arch
+
+    @property
+    def cond_dim(self) -> int:
+        return int(self.cfg.data.encoder.get("cond_dim", 512))
+
+    @property
+    def flow(self) -> FlowRLConfig:
+        """FlowRLConfig with reward args auto-completed: any reward
+        parameter named latent_dim / latent_tokens / cond_dim that the spec
+        leaves unset is filled from the run's latent/condition geometry, so
+        configs state it once instead of once per reward."""
+        f = self.cfg.flow
+        auto = {"latent_dim": f.latent_dim, "latent_tokens": f.latent_tokens,
+                "cond_dim": self.cond_dim}
+        filled = []
+        for spec in f.rewards:
+            accepted = registry.describe("reward", spec.reward_type)["params"]
+            args = dict(spec.args)
+            args.update({k: v for k, v in auto.items()
+                         if k in accepted and k not in args})
+            filled.append(dataclasses.replace(spec, args=args))
+        return dataclasses.replace(f, rewards=tuple(filled))
+
+    def build_dataset(self):
+        if self._dataset is None:
+            d = self.cfg.data
+            self._dataset = registry.build_from_config(
+                "dataset",
+                {"type": d.dataset,
+                 "args": {"n_prompts": d.n_prompts,
+                          "batch_prompts": d.batch_prompts,
+                          "seed": self.cfg.seed, **d.args}})
+        return self._dataset
+
+    def build_provider(self, prompts: Optional[Sequence[str]] = None,
+                       live: bool = False) -> ConditionProvider:
+        """Phase 1 (paper §2.2): with preprocessing on, encode+cache
+        ``prompts`` once and return a cache-backed provider (encoders
+        offloaded); otherwise a live-encoding provider."""
+        f, d = self.cfg.flow, self.cfg.data
+        if live or not f.preprocessing:
+            return ConditionProvider(preprocessing=False,
+                                     encoder_kw=dict(d.encoder))
+        # sub-directory per encoder config: cache entries are keyed by
+        # prompt hash only, so a changed encoder geometry must not silently
+        # reuse embeddings cached under the old one
+        enc_tag = hashlib.sha1(
+            json.dumps(d.encoder, sort_keys=True).encode()).hexdigest()[:10]
+        cache = PreprocessCache(os.path.join(f.cache_dir, f"enc_{enc_tag}"))
+        if prompts:
+            preprocess_dataset(prompts, cache, **d.encoder)
+        return ConditionProvider(preprocessing=True, cache=cache)
+
+    def build_trainer(self, key: Optional[jax.Array] = None):
+        if self._trainer is None:
+            key = (jax.random.PRNGKey(self.cfg.seed) if key is None else key)
+            self._trainer = registry.build_from_config(
+                "trainer", self.cfg.flow.trainer_type,
+                self.arch, self.flow, self.cfg.optim,
+                key=key, cond_dim=self.cond_dim)
+        return self._trainer
+
+    def build_sampler(self, key: Optional[jax.Array] = None,
+                      max_batch: int = 8, params=None) -> FlowSampler:
+        """``params`` priority: explicit argument > this Experiment's
+        trained state (if ``train()`` ran) > fresh init."""
+        key = jax.random.PRNGKey(self.cfg.seed) if key is None else key
+        if params is None and self._trainer is not None:
+            params = self._trainer.state.params
+        return FlowSampler(self.arch, self.flow, key=key,
+                           max_batch=max_batch, cond_dim=self.cond_dim,
+                           params=params)
+
+    def describe(self) -> Dict[str, Any]:
+        """Resolved-component summary (uses ``registry.describe``)."""
+        f = self.cfg.flow
+        return {
+            "arch": {"name": self.arch.name, "family": self.arch.family,
+                     "n_params": self.arch.n_params()},
+            "trainer": registry.describe("trainer", f.trainer_type),
+            "scheduler": registry.describe("scheduler", f.sde_type),
+            "rewards": [s.reward_type for s in f.rewards],
+            "optimizer": registry.describe("optimizer",
+                                           self.cfg.optim.optimizer),
+            "dataset": registry.describe("dataset", self.cfg.data.dataset),
+        }
+
+    # ---------------------------------------------------------------- train
+    def _ckpt_identity(self) -> Dict[str, Any]:
+        """The config subset that must match for a checkpoint to be
+        resumable.  Loop knobs and schedule length (``--steps`` extends a
+        run, moving loop.steps + optim.total_steps/warmup_steps) may
+        legitimately change between restarts; everything else — arch,
+        trainer, rewards, dynamics, data — is guarded against silently
+        resuming someone else's state."""
+        ident = to_dict(self.cfg)
+        ident.pop("loop", None)
+        for k in ("total_steps", "warmup_steps"):
+            ident["optim"].pop(k, None)
+        # normalize through JSON so tuples (rewards, betas) compare equal
+        # to the lists they round-trip to on disk
+        return json.loads(json.dumps(ident))
+
+    def _identity_path(self, ckpt_dir: str) -> str:
+        return os.path.join(ckpt_dir, "experiment.json")
+
+    def _write_ckpt_identity(self, ckpt_dir: str) -> None:
+        os.makedirs(ckpt_dir, exist_ok=True)
+        with open(self._identity_path(ckpt_dir), "w") as f:
+            json.dump(self._ckpt_identity(), f, indent=1)
+
+    def _check_ckpt_identity(self, ckpt_dir: str) -> None:
+        path = self._identity_path(ckpt_dir)
+        if not os.path.exists(path):
+            return                       # pre-identity checkpoint: tolerate
+        with open(path) as f:
+            saved = json.load(f)
+        for k in ("total_steps", "warmup_steps"):   # normalize like current
+            saved.get("optim", {}).pop(k, None)
+        current = self._ckpt_identity()
+        if saved != current:
+            diff = sorted(k for k in set(saved) | set(current)
+                          if saved.get(k) != current.get(k))
+            raise ConfigError(
+                f"checkpoint dir {ckpt_dir!r} was written by a different "
+                f"experiment (mismatched: {diff}); refusing to resume — "
+                "point loop.ckpt_dir elsewhere or set loop.resume=false")
+
+    def default_callbacks(self) -> List[loop_lib.Callback]:
+        lc = self.cfg.loop
+        cbs: List[loop_lib.Callback] = []
+        if lc.log_every:
+            cbs.append(loop_lib.MetricLogger(lc.log_every))
+        if lc.save_every:
+            cbs.append(loop_lib.PeriodicCheckpoint(lc.ckpt_dir,
+                                                   lc.save_every))
+        if lc.log_file:
+            cbs.append(loop_lib.JSONLogSink(lc.log_file))
+        if lc.early_stop_patience:
+            cbs.append(loop_lib.EarlyStop(lc.early_stop_metric,
+                                          lc.early_stop_patience,
+                                          lc.early_stop_min_delta))
+        return cbs
+
+    def train(self, callbacks: Sequence[loop_lib.Callback] = (),
+              resume: Optional[bool] = None) -> Dict[str, Any]:
+        """Run the shared TrainLoop end-to-end.
+
+        Returns ``{"history", "state", "start_step", "final_step"}``.  With
+        ``resume`` (default: ``cfg.loop.resume``) the latest checkpoint in
+        ``cfg.loop.ckpt_dir`` restores the **full** RLState — params and
+        optimizer moments — before training continues.  ``callbacks``
+        *extend* the config-driven defaults (disable those via the loop
+        fields: ``log_every=0``, ``save_every=0``, ...)."""
+        lc = self.cfg.loop
+        key = jax.random.PRNGKey(self.cfg.seed)
+        ds = self.build_dataset()
+        provider = self.build_provider(ds.prompts)
+        trainer = self.build_trainer(key)
+
+        start_step = 0
+        resume = lc.resume if resume is None else resume
+        if resume and checkpoint.latest_step(lc.ckpt_dir) is not None:
+            self._check_ckpt_identity(lc.ckpt_dir)
+            try:
+                step, state = checkpoint.restore_latest(lc.ckpt_dir,
+                                                        trainer.state)
+            except ValueError as e:
+                raise ConfigError(
+                    f"cannot resume from {lc.ckpt_dir!r}: {e} — set "
+                    "loop.resume=false or point loop.ckpt_dir elsewhere"
+                ) from None
+            if step is not None:
+                trainer.state = state
+                start_step = step
+                print(f"[resume] restored full RLState at step {step} "
+                      f"from {lc.ckpt_dir}", flush=True)
+        if lc.save_every:
+            if not resume and checkpoint.latest_step(lc.ckpt_dir) is not None:
+                # refusing beats silently re-labelling the dir: stale
+                # higher-step checkpoints would win the next auto-resume
+                raise ConfigError(
+                    f"loop.ckpt_dir {lc.ckpt_dir!r} already contains "
+                    "checkpoints; starting fresh (resume=false) would mix "
+                    "runs — remove them or point loop.ckpt_dir elsewhere")
+            self._write_ckpt_identity(lc.ckpt_dir)
+
+        train_loop = loop_lib.TrainLoop(
+            trainer, provider, ds, steps=lc.steps, key=key,
+            start_step=start_step,
+            callbacks=self.default_callbacks() + list(callbacks))
+        history = train_loop.run()
+        final = history[-1]["step"] + 1 if history else start_step
+        return {"history": history, "state": trainer.state,
+                "start_step": start_step, "final_step": final}
+
+    # ---------------------------------------------------------------- serve
+    def serve(self, prompts: Sequence[str], max_batch: int = 8,
+              key: Optional[jax.Array] = None, params=None) -> jax.Array:
+        """Batched sampling for a list of prompt requests -> latents."""
+        key = jax.random.PRNGKey(self.cfg.seed) if key is None else key
+        # serving encodes live by default: requests are open-vocabulary, so
+        # the preprocessing cache can't be assumed to cover them
+        provider = self.build_provider(live=True)
+        cond = provider.get(prompts)["cond"]
+        sampler = self.build_sampler(key, max_batch=max_batch, params=params)
+        return sampler.serve(cond, key)

@@ -1,0 +1,174 @@
+"""Reusable RL training loop with a small callback protocol.
+
+One loop serves every entry point (``launch/train.py``, the examples, sweep
+workers): iterate the prompt dataset, fetch condition embeddings from the
+:class:`ConditionProvider`, run ``trainer.step``, and fan the metric row out
+to callbacks.  Checkpointing saves the trainer's **full** ``RLState``
+(params *and* AdamW moments), so a resumed run continues bit-identically.
+
+Built-in callbacks: :class:`MetricLogger` (console), :class:`JSONLogSink`
+(metric-log file), :class:`PeriodicCheckpoint` (full-state saves),
+:class:`EarlyStop` (patience on any metric).  Custom callbacks subclass
+:class:`Callback` and may call ``loop.request_stop()``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+
+from repro import checkpoint
+
+
+class Callback:
+    """No-op base; override any subset of the hooks."""
+
+    def on_train_start(self, loop: "TrainLoop") -> None:
+        pass
+
+    def on_step(self, loop: "TrainLoop", step: int,
+                metrics: Dict[str, Any]) -> None:
+        pass
+
+    def on_train_end(self, loop: "TrainLoop",
+                     history: List[Dict[str, Any]]) -> None:
+        pass
+
+
+class MetricLogger(Callback):
+    """Console progress every ``every`` steps (and on the final step)."""
+
+    def __init__(self, every: int = 10):
+        self.every = every
+
+    def on_step(self, loop, step, metrics):
+        if self.every and (step % self.every == 0
+                           or step == loop.steps - 1):
+            print(f"  step {step:4d}  reward={metrics['reward']:+.4f}  "
+                  f"loss={metrics['loss']:+.4f}  dt={metrics['dt']:.2f}s",
+                  flush=True)
+
+
+class JSONLogSink(Callback):
+    """Write the full metric history to ``path`` as JSON at train end.
+
+    Resume-aware: rows from a previous (interrupted) run that precede this
+    run's ``start_step`` are preserved, so the log always covers step 0..N
+    even across restarts; a resume with nothing left to do keeps the
+    existing log untouched."""
+
+    def __init__(self, path: str):
+        self.path = path
+
+    def on_train_end(self, loop, history):
+        if not history:
+            return
+        prior = []
+        if loop.start_step and os.path.exists(self.path):
+            try:
+                with open(self.path) as f:
+                    rows = json.load(f)
+                prior = [r for r in rows if r.get("step", -1)
+                         < history[0]["step"]]
+            except (ValueError, OSError):
+                pass                     # unreadable prior log: start fresh
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        with open(self.path, "w") as f:
+            json.dump(prior + history, f)
+
+
+class PeriodicCheckpoint(Callback):
+    """Save the trainer's full RLState every ``every`` steps."""
+
+    def __init__(self, ckpt_dir: str, every: int = 50):
+        self.ckpt_dir = ckpt_dir
+        self.every = every
+
+    def on_step(self, loop, step, metrics):
+        if self.every and (step + 1) % self.every == 0:
+            checkpoint.save_checkpoint(self.ckpt_dir, step + 1,
+                                       loop.trainer.state)
+
+
+class EarlyStop(Callback):
+    """Stop when ``metric`` hasn't improved by ``min_delta`` for
+    ``patience`` consecutive steps (higher is better)."""
+
+    def __init__(self, metric: str = "reward", patience: int = 20,
+                 min_delta: float = 0.0):
+        self.metric = metric
+        self.patience = patience
+        self.min_delta = min_delta
+        self.best: Optional[float] = None
+        self.stale = 0
+
+    def on_step(self, loop, step, metrics):
+        val = float(metrics[self.metric])
+        if self.best is None or val > self.best + self.min_delta:
+            self.best, self.stale = val, 0
+            return
+        self.stale += 1
+        if self.stale >= self.patience:
+            print(f"[early-stop] {self.metric} stalled at {self.best:+.4f} "
+                  f"for {self.patience} steps", flush=True)
+            loop.request_stop()
+
+
+class TrainLoop:
+    """Drive ``trainer.step`` over a prompt dataset.
+
+    ``start_step > 0`` resumes: the data stream is advanced past the batches
+    already consumed and iteration keys are re-derived from the step index
+    (``trainer.step`` folds the key by ``it``), so a resumed run replays the
+    exact schedule of an uninterrupted one.
+    """
+
+    def __init__(self, trainer, provider, dataset, *, steps: int,
+                 key: jax.Array, start_step: int = 0,
+                 callbacks: Sequence[Callback] = ()):
+        self.trainer = trainer
+        self.provider = provider
+        self.dataset = dataset
+        self.steps = steps
+        self.key = key
+        self.start_step = start_step
+        self.callbacks = list(callbacks)
+        self.history: List[Dict[str, Any]] = []
+        self._stop = False
+
+    def request_stop(self) -> None:
+        self._stop = True
+
+    def run(self) -> List[Dict[str, Any]]:
+        for cb in self.callbacks:
+            cb.on_train_start(self)
+        stream = self.dataset.infinite()
+        for _ in range(self.start_step):       # replay-skip consumed batches
+            next(stream)
+        for it in range(self.start_step, self.steps):
+            t_it = time.time()
+            prompts = next(stream)
+            cond = self.provider.get(prompts)["cond"]
+            m = self.trainer.step(cond, self.key, it=it)
+            row: Dict[str, Any] = {
+                "step": it,
+                "reward": float(m["reward_mean"]),
+                "loss": float(m["loss"]),
+                "grad_norm": float(m["grad_norm"]),
+                "encode_resident": self.provider.encoder_resident,
+                "dt": round(time.time() - t_it, 3),
+            }
+            for k, v in m.items():
+                if k.startswith("reward/"):
+                    row[k] = float(v)
+            self.history.append(row)
+            for cb in self.callbacks:
+                cb.on_step(self, it, row)
+            if self._stop:
+                break
+        for cb in self.callbacks:
+            cb.on_train_end(self, self.history)
+        return self.history

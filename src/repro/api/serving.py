@@ -1,0 +1,46 @@
+"""Serving side of the Experiment front door: batched flow-matching
+sampling over any registered backbone × scheduler combination.
+
+``FlowSampler`` (moved here from ``launch/serve.py``) micro-batches prompt
+requests through a jit'd rollout; ``launch/serve.py`` and the serving
+example are thin wrappers over :meth:`repro.api.Experiment.build_sampler`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schedulers
+from repro.core.rollout import rollout
+from repro.models import params as params_lib
+from repro.models.flow import FlowAdapter
+
+
+class FlowSampler:
+    """Batched sampling server over a FlowAdapter."""
+
+    def __init__(self, arch_cfg, flow_cfg, *, key, max_batch: int = 8,
+                 cond_dim: int = 512, params=None):
+        self.adapter = FlowAdapter(arch_cfg, flow_cfg, cond_dim)
+        self.scheduler = schedulers.build(flow_cfg.sde_type, flow_cfg.eta)
+        self.flow_cfg = flow_cfg
+        self.params = (params if params is not None
+                       else params_lib.init(self.adapter.spec(), key))
+        self.max_batch = max_batch
+        self._rollout = jax.jit(
+            lambda p, cond, k: rollout(self.adapter, p, cond, k,
+                                       self.scheduler, flow_cfg.num_steps))
+
+    def serve(self, cond: jax.Array, key: jax.Array) -> jax.Array:
+        """cond: (N, Lc, D) -> latents (N, Lt, ld); micro-batched."""
+        outs = []
+        N = cond.shape[0]
+        for i in range(0, N, self.max_batch):
+            chunk = cond[i:i + self.max_batch]
+            pad = self.max_batch - chunk.shape[0]
+            if pad:
+                chunk = jnp.pad(chunk, ((0, pad), (0, 0), (0, 0)))
+            traj = self._rollout(self.params, chunk,
+                                 jax.random.fold_in(key, i))
+            outs.append(traj.x0[:chunk.shape[0] - pad if pad else None])
+        return jnp.concatenate(outs, axis=0)[:N]

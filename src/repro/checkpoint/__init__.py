@@ -1,3 +1,5 @@
-from repro.checkpoint.io import save_checkpoint, load_checkpoint, latest_step
+from repro.checkpoint.io import (save_checkpoint, load_checkpoint,
+                                 latest_step, restore_latest)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "restore_latest"]

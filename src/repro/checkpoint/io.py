@@ -1,4 +1,5 @@
-"""Pytree checkpointing: npz payload + msgpack manifest (no orbax on image).
+"""Pytree checkpointing: npz payload + msgpack/JSON manifest (no orbax on
+image; the manifest falls back to JSON when msgpack is unavailable).
 
 Multi-host aware: arrays are gathered to host (``jax.device_get``) before
 writing; on restore, the caller re-shards by donating the loaded tree into a
@@ -7,24 +8,54 @@ atomic (tmp + rename) so a preempted save never corrupts the latest step.
 """
 from __future__ import annotations
 
+import json
 import os
 import re
 from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import msgpack
 import numpy as np
 
+try:
+    import msgpack
+except ImportError:                      # pragma: no cover - env dependent
+    msgpack = None                       # gate: JSON manifests instead
+
 _SEP = "/"
+
+
+def _pack_manifest(manifest: dict) -> bytes:
+    if msgpack is not None:
+        return msgpack.packb(manifest)
+    return json.dumps(manifest).encode()
+
+
+def _unpack_manifest(raw: bytes) -> dict:
+    # JSON manifests start with '{'; msgpack fixmaps never do
+    if raw[:1] == b"{":
+        return json.loads(raw.decode())
+    if msgpack is None:
+        raise RuntimeError("checkpoint manifest is msgpack-encoded but the "
+                           "'msgpack' module is not installed")
+    return msgpack.unpackb(raw)
+
+
+def _path_entry(k) -> str:
+    # DictKey -> .key, SequenceKey -> .idx, GetAttrKey (NamedTuples such as
+    # RLState/AdamWState) -> .name
+    for attr in ("key", "idx", "name"):
+        v = getattr(k, attr, None)
+        if v is not None:
+            return str(v)
+    return str(k)
 
 
 def _flatten_with_paths(tree) -> Tuple[list, Any]:
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for path, leaf in flat:
-        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
-                        for k in path)
+        key = _SEP.join(_path_entry(k) for k in path)
         out.append((key, leaf))
     return out, treedef
 
@@ -43,12 +74,18 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
             arr = arr.view(np.uint16)
         arrays[key] = arr
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    # manifest lands (atomically) BEFORE the npz: latest_step() keys on the
+    # .npz, so a preemption between the two leaves at worst an orphan
+    # manifest that the next save overwrites — never a discoverable
+    # checkpoint that crashes restore for want of its manifest
+    tmp_m = path + ".tmp.manifest"
+    with open(tmp_m, "wb") as f:
+        f.write(_pack_manifest(manifest))
+    os.replace(tmp_m, path + ".manifest")
     tmp = path + ".tmp.npz"
     with open(tmp, "wb") as f:
         np.savez(f, **arrays)
     os.replace(tmp, path + ".npz")
-    with open(path + ".manifest", "wb") as f:
-        f.write(msgpack.packb(manifest))
     return path + ".npz"
 
 
@@ -56,9 +93,17 @@ def load_checkpoint(ckpt_dir: str, step: int, like: Any) -> Any:
     """Restore into the structure of ``like`` (shape/dtype validated)."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(path + ".manifest", "rb") as f:
-        manifest = msgpack.unpackb(f.read())
+        manifest = _unpack_manifest(f.read())
     flat, treedef = _flatten_with_paths(like)
     with np.load(path + ".npz") as z:
+        missing = [key for key, _ in flat if key not in z.files]
+        if missing:
+            raise ValueError(
+                f"checkpoint {path}.npz doesn't match the requested "
+                f"structure: {len(missing)} missing key(s), e.g. "
+                f"{missing[:3]} — was it saved from a different state "
+                "layout (legacy params-only checkpoint restored as a full "
+                "RLState)?")
         leaves = []
         for key, leaf in flat:
             arr = z[key]
@@ -76,3 +121,16 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
              if (m := re.match(r"step_(\d+)\.npz$", f))]
     return max(steps) if steps else None
+
+
+def restore_latest(ckpt_dir: str, like: Any) -> Tuple[Optional[int], Any]:
+    """Restore the newest checkpoint into the structure of ``like``.
+
+    Returns ``(step, tree)``; ``(None, like)`` when no checkpoint exists.
+    ``like`` may be any pytree — in particular a trainer's full ``RLState``
+    (params **and** optimizer moments), which is what the Experiment layer
+    saves, so a resumed run is bit-identical to an uninterrupted one."""
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None, like
+    return step, load_checkpoint(ckpt_dir, step, like)

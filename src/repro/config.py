@@ -9,16 +9,16 @@ Everything in the framework is driven by three dataclasses:
 * :class:`RunConfig` — mesh / shapes / dtype / optimizer for a launch.
 
 Configs are plain dataclasses so they can be loaded from dicts/JSON via
-:func:`from_dict` (dacite) — the paper uses YAML; the mechanism is identical.
+:func:`from_dict` (a native strict typed loader — no third-party dependency;
+the paper uses YAML; the mechanism is identical).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import typing
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
-
-import dacite
 
 # ---------------------------------------------------------------------------
 # Architecture config
@@ -260,6 +260,7 @@ class OptimConfig:
     total_steps: int = 1000
     grad_clip: float = 1.0
     schedule: str = "warmup_cosine"      # warmup_cosine | constant
+    optimizer: str = "adamw"             # registry name ("optimizer" kind)
 
 
 @dataclass(frozen=True)
@@ -284,27 +285,173 @@ class ShardingConfig:
 
 
 @dataclass(frozen=True)
+class DataConfig:
+    """Prompt-dataset + frozen-encoder selection for an Experiment."""
+    dataset: str = "synthetic"           # registry name ("dataset" kind)
+    n_prompts: int = 64
+    batch_prompts: int = 4
+    # extra kwargs forwarded to the registered dataset factory
+    args: Dict[str, Any] = field(default_factory=dict)
+    # kwargs of the frozen condition encoder (cond_dim/cond_len/vocab/...);
+    # empty -> FrozenTextEncoder defaults (the paper-scale ~67M tower)
+    encoder: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class LoopConfig:
+    """TrainLoop behaviour: length, logging, checkpointing, early stop."""
+    steps: int = 100
+    log_every: int = 10                  # 0 -> silent
+    save_every: int = 50                 # 0 -> no periodic checkpoints
+    ckpt_dir: str = "checkpoints"
+    log_file: str = ""                   # non-empty -> JSON metric sink
+    resume: bool = True                  # auto-resume from latest checkpoint
+    early_stop_patience: int = 0         # 0 -> disabled
+    early_stop_metric: str = "reward"    # any TrainLoop history-row key
+    early_stop_min_delta: float = 0.0
+
+
+@dataclass(frozen=True)
 class RunConfig:
     arch: str = "smollm-360m"
+    # use the ≤2-layer reduced arch variant (CPU-runnable smoke scale)
+    reduced: bool = False
+    # declarative field overrides applied onto the resolved ArchConfig
+    # (e.g. {"n_layers": 12, "d_model": 768} for a custom DiT size)
+    arch_overrides: Dict[str, Any] = field(default_factory=dict)
     shape: str = "train_4k"
     mesh: MeshConfig = field(default_factory=MeshConfig)
     sharding: ShardingConfig = field(default_factory=ShardingConfig)
     optim: OptimConfig = field(default_factory=OptimConfig)
     flow: FlowRLConfig = field(default_factory=FlowRLConfig)
+    data: DataConfig = field(default_factory=DataConfig)
+    loop: LoopConfig = field(default_factory=LoopConfig)
     param_dtype: str = "bfloat16"
     activ_dtype: str = "bfloat16"
     seed: int = 0
 
 
 # ---------------------------------------------------------------------------
-# Loading
+# Loading — native strict typed from_dict (nested dataclasses, tuples,
+# Optional, Dict/List, unknown-key errors). No third-party dependency.
 # ---------------------------------------------------------------------------
 
-_DACITE_CFG = dacite.Config(cast=[tuple], strict=True)
+
+class ConfigError(TypeError):
+    """Raised when a dict doesn't match the target dataclass schema."""
 
 
-def from_dict(cls: type, d: Dict[str, Any]) -> Any:
-    return dacite.from_dict(data_class=cls, data=d, config=_DACITE_CFG)
+def _type_name(tp: Any) -> str:
+    return getattr(tp, "__name__", None) or str(tp)
+
+
+def coerce(value: Any, tp: Any, path: str = "<value>") -> Any:
+    """Convert ``value`` to type ``tp`` (typing construct or dataclass),
+    raising :class:`ConfigError` with the dotted ``path`` on mismatch."""
+    if tp is Any or tp is dataclasses.MISSING:
+        return value
+    origin = typing.get_origin(tp)
+    args = typing.get_args(tp)
+    if origin is typing.Union:                      # Optional[T] / Union
+        if value is None and type(None) in args:
+            return None
+        errors = []
+        for cand in args:
+            if cand is type(None):
+                continue
+            try:
+                return coerce(value, cand, path)
+            except ConfigError as e:
+                errors.append(str(e))
+        raise ConfigError(f"{path}: {value!r} matches no member of "
+                          f"{_type_name(tp)} ({'; '.join(errors)})")
+    if dataclasses.is_dataclass(tp) and isinstance(tp, type):
+        if isinstance(value, tp):
+            return value
+        if not isinstance(value, dict):
+            raise ConfigError(f"{path}: expected a dict for "
+                              f"{_type_name(tp)}, got {type(value).__name__}")
+        return from_dict(tp, value, _path=path)
+    if origin in (tuple,) or tp is tuple:
+        if not isinstance(value, (list, tuple)):
+            raise ConfigError(f"{path}: expected a sequence, got "
+                              f"{type(value).__name__}")
+        if not args:                                 # bare tuple
+            return tuple(value)
+        if len(args) == 2 and args[1] is Ellipsis:   # Tuple[T, ...]
+            return tuple(coerce(v, args[0], f"{path}[{i}]")
+                         for i, v in enumerate(value))
+        if len(value) != len(args):                  # Tuple[T1, T2, ...]
+            raise ConfigError(f"{path}: expected {len(args)} items, "
+                              f"got {len(value)}")
+        return tuple(coerce(v, a, f"{path}[{i}]")
+                     for i, (v, a) in enumerate(zip(value, args)))
+    if origin in (list,) or tp is list:
+        if not isinstance(value, (list, tuple)):
+            raise ConfigError(f"{path}: expected a list, got "
+                              f"{type(value).__name__}")
+        elem = args[0] if args else Any
+        return [coerce(v, elem, f"{path}[{i}]") for i, v in enumerate(value)]
+    if origin in (dict,) or tp is dict:
+        if not isinstance(value, dict):
+            raise ConfigError(f"{path}: expected a dict, got "
+                              f"{type(value).__name__}")
+        kt, vt = args if args else (Any, Any)
+        return {coerce(k, kt, f"{path}<key>"): coerce(v, vt, f"{path}[{k}]")
+                for k, v in value.items()}
+    if tp is bool:
+        if isinstance(value, bool):
+            return value
+        raise ConfigError(f"{path}: expected bool, got {value!r}")
+    if tp is int:
+        if isinstance(value, int) and not isinstance(value, bool):
+            return value
+        raise ConfigError(f"{path}: expected int, got {value!r}")
+    if tp is float:
+        if isinstance(value, (int, float)) and not isinstance(value, bool):
+            return float(value)
+        raise ConfigError(f"{path}: expected float, got {value!r}")
+    if tp is str:
+        if isinstance(value, str):
+            return value
+        raise ConfigError(f"{path}: expected str, got {value!r}")
+    if isinstance(tp, type):
+        if isinstance(value, tp):
+            return value
+        raise ConfigError(f"{path}: expected {_type_name(tp)}, got "
+                          f"{type(value).__name__}")
+    return value
+
+
+def field_types(cls: type) -> Dict[str, Any]:
+    """Resolved {field name: type} for a dataclass (PEP 563 safe)."""
+    return typing.get_type_hints(cls)
+
+
+def from_dict(cls: type, d: Dict[str, Any], *, _path: str = "") -> Any:
+    """Strict typed construction of dataclass ``cls`` from a plain dict.
+
+    Handles nested dataclasses, ``Tuple``/``List``/``Dict``/``Optional``
+    fields, casts lists to tuples, and raises :class:`ConfigError` on
+    unknown keys or type mismatches (with the dotted field path)."""
+    if not dataclasses.is_dataclass(cls):
+        raise ConfigError(f"{cls!r} is not a dataclass")
+    if not isinstance(d, dict):
+        raise ConfigError(f"{_path or _type_name(cls)}: expected a dict, "
+                          f"got {type(d).__name__}")
+    names = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(d) - names)
+    if unknown:
+        raise ConfigError(
+            f"{_path or _type_name(cls)}: unknown key(s) {unknown} for "
+            f"{_type_name(cls)}; valid keys: {sorted(names)}")
+    hints = field_types(cls)
+    kwargs = {k: coerce(v, hints[k], f"{_path}.{k}" if _path else k)
+              for k, v in d.items()}
+    try:
+        return cls(**kwargs)
+    except TypeError as e:                # e.g. missing required field
+        raise ConfigError(f"{_path or _type_name(cls)}: {e}") from None
 
 
 def load_json(cls: type, path: str) -> Any:

@@ -4,12 +4,17 @@ paper's own DiT family (``flux_dit``).
 Each module exports ``config()`` (the exact assigned full-scale config) and
 ``reduced()`` (≤2 layers, d_model ≤ 512, ≤4 experts — used by CPU smoke
 tests; the full configs are exercised only via the dry-run).
+
+Every arch is also registered under the ``"arch"`` registry kind, so the
+Experiment layer resolves backbones the same way it resolves trainers:
+``registry.build("arch", "flux_dit", reduced=True)``.
 """
 from __future__ import annotations
 
 import importlib
 from typing import Dict, List
 
+from repro import registry
 from repro.config import ArchConfig
 
 ARCH_IDS = [
@@ -47,3 +52,18 @@ def get_reduced(arch: str) -> ArchConfig:
 
 def all_archs() -> List[str]:
     return list(ARCH_IDS)
+
+
+def _arch_factory(arch: str):
+    def build(reduced: bool = False) -> ArchConfig:
+        return get_reduced(arch) if reduced else get(arch)
+    build.__doc__ = (f"ArchConfig for {arch} "
+                     "(reduced=True -> CPU-scale smoke variant).")
+    build.__name__ = f"arch_{_MOD[arch]}"
+    return build
+
+
+for _a in ARCH_IDS + PAPER_ARCHS:
+    if not registry.is_registered("arch", _a):
+        registry.register("arch", _a)(_arch_factory(_a))
+del _a

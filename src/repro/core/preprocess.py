@@ -23,9 +23,17 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:                      # pragma: no cover - env dependent
+    zstandard = None                     # gate: fall back to raw npz blobs
 
 F32 = jnp.float32
+
+# zstd frame magic — lets ``PreprocessCache.get`` auto-detect whether a blob
+# was written compressed, so caches stay readable across environments
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 
 def prompt_key(prompt: str) -> str:
@@ -78,13 +86,16 @@ class FrozenTextEncoder:
 
 
 class PreprocessCache:
-    """zstd-compressed npz cache of condition embeddings."""
+    """zstd-compressed npz cache of condition embeddings.
+
+    When the ``zstandard`` module is unavailable, blobs are written as raw
+    npz; reads auto-detect the frame type, so mixed caches stay valid."""
 
     def __init__(self, cache_dir: str):
         self.dir = cache_dir
         os.makedirs(cache_dir, exist_ok=True)
-        self._cctx = zstandard.ZstdCompressor(level=3)
-        self._dctx = zstandard.ZstdDecompressor()
+        self._cctx = zstandard.ZstdCompressor(level=3) if zstandard else None
+        self._dctx = zstandard.ZstdDecompressor() if zstandard else None
 
     def _path(self, prompt: str) -> str:
         return os.path.join(self.dir, prompt_key(prompt) + ".npz.zst")
@@ -95,12 +106,22 @@ class PreprocessCache:
     def put(self, prompt: str, arrays: Dict[str, np.ndarray]) -> None:
         buf = io.BytesIO()
         np.savez(buf, **{k: np.asarray(v) for k, v in arrays.items()})
+        payload = buf.getvalue()
+        if self._cctx is not None:
+            payload = self._cctx.compress(payload)
         with open(self._path(prompt), "wb") as f:
-            f.write(self._cctx.compress(buf.getvalue()))
+            f.write(payload)
 
     def get(self, prompt: str) -> Dict[str, np.ndarray]:
         with open(self._path(prompt), "rb") as f:
-            raw = self._dctx.decompress(f.read())
+            raw = f.read()
+        if raw[:4] == _ZSTD_MAGIC:
+            if self._dctx is None:
+                raise RuntimeError(
+                    "cache entry is zstd-compressed but the 'zstandard' "
+                    "module is not installed; re-run preprocessing or "
+                    "install zstandard")
+            raw = self._dctx.decompress(raw)
         with np.load(io.BytesIO(raw)) as z:
             return {k: z[k] for k in z.files}
 
@@ -130,14 +151,21 @@ class ConditionProvider:
     ``preprocessing=True``  -> reads the cache; the encoder is NEVER
                                instantiated (``encoder_resident`` stays
                                False — the paper's offload guarantee).
+                               A cache miss raises :class:`KeyError` naming
+                               the missing prompt, unless
+                               ``encode_on_miss=True`` opts into lazily
+                               encoding (and caching) it — which instantiates
+                               the frozen tower and forfeits the offload.
     ``preprocessing=False`` -> re-encodes every request (the baseline the
                                paper's Table 2 compares against).
     """
 
     def __init__(self, *, preprocessing: bool, cache: Optional[PreprocessCache]
-                 = None, encoder_kw: Optional[dict] = None):
+                 = None, encoder_kw: Optional[dict] = None,
+                 encode_on_miss: bool = False):
         self.preprocessing = preprocessing
         self.cache = cache
+        self.encode_on_miss = encode_on_miss
         self._encoder: Optional[FrozenTextEncoder] = None
         self._encoder_kw = encoder_kw or {}
 
@@ -149,14 +177,34 @@ class ConditionProvider:
     def resident_param_bytes(self) -> int:
         return (self._encoder.n_params * 4) if self._encoder else 0
 
+    def _ensure_encoder(self) -> FrozenTextEncoder:
+        if self._encoder is None:              # frozen tower stays resident
+            self._encoder = FrozenTextEncoder(**self._encoder_kw)
+        return self._encoder
+
+    def _cached(self, prompt: str) -> Dict[str, np.ndarray]:
+        try:
+            return self.cache.get(prompt)
+        except FileNotFoundError:
+            if not self.encode_on_miss:
+                raise KeyError(
+                    f"prompt not in preprocessing cache "
+                    f"({self.cache.dir!r}): {prompt!r} — run "
+                    "preprocess_dataset() over the corpus first, or opt in "
+                    "with ConditionProvider(..., encode_on_miss=True)"
+                ) from None
+            out = self._ensure_encoder().encode([prompt])
+            rec = {"cond": np.asarray(out["cond"])[0],
+                   "pooled": np.asarray(out["pooled"])[0]}
+            self.cache.put(prompt, rec)
+            return rec
+
     def get(self, prompts: Sequence[str]) -> Dict[str, jax.Array]:
         if self.preprocessing:
             assert self.cache is not None, "preprocessing requires a cache"
-            arrs = [self.cache.get(p) for p in prompts]
+            arrs = [self._cached(p) for p in prompts]
             return {
                 "cond": jnp.stack([jnp.asarray(a["cond"]) for a in arrs]),
                 "pooled": jnp.stack([jnp.asarray(a["pooled"]) for a in arrs]),
             }
-        if self._encoder is None:              # frozen tower stays resident
-            self._encoder = FrozenTextEncoder(**self._encoder_kw)
-        return self._encoder.encode(prompts)
+        return self._ensure_encoder().encode(prompts)

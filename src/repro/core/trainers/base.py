@@ -51,7 +51,8 @@ class BaseTrainer:
         self.scheduler = schedulers.build(sde_type, flow_cfg.eta)
         k_p, k_r = jax.random.split(key)
         params = params_lib.init(self.adapter.spec(), k_p, dtype)
-        self.state = RLState(params, optim.adamw_init(params))
+        self.optimizer = registry.build("optimizer", opt_cfg.optimizer)
+        self.state = RLState(params, self.optimizer.init(params))
         specs = flow_cfg.rewards or DEFAULT_REWARDS
         self.loader = MultiRewardLoader(specs, k_r)
         self._lr = optim.make_schedule(opt_cfg)
@@ -95,8 +96,8 @@ class BaseTrainer:
         grads, gnorm = optim.clip_by_global_norm(grads,
                                                  self.opt_cfg.grad_clip)
         lr = self._lr(state.opt.step)
-        new_p, new_opt = optim.adamw_update(state.params, grads, state.opt,
-                                            self.opt_cfg, lr)
+        new_p, new_opt = self.optimizer.update(state.params, grads, state.opt,
+                                               self.opt_cfg, lr)
         aux = dict(aux)
         aux.update(loss=loss, grad_norm=gnorm, lr=lr)
         return RLState(new_p, new_opt), aux

@@ -3,6 +3,8 @@
 ``synthetic_prompts`` generates a deterministic compositional prompt corpus
 (the Pick-a-Pic/OCR-style distribution stand-in); ``PromptDataset`` provides
 shuffled epoch iteration with per-host sharding for multi-process launches.
+The corpus is registered as ``dataset:synthetic`` so Experiments resolve it
+from configuration alone.
 """
 from __future__ import annotations
 
@@ -10,6 +12,8 @@ import itertools
 from typing import Iterator, List, Sequence
 
 import numpy as np
+
+from repro import registry
 
 _SUBJECTS = ["a fox", "an astronaut", "a teapot", "two dancers", "a robot",
              "a lighthouse", "an origami crane", "a neon sign", "a tram",
@@ -52,3 +56,14 @@ class PromptDataset:
     def infinite(self) -> Iterator[List[str]]:
         for e in itertools.count():
             yield from self.epoch(e)
+
+
+@registry.register("dataset", "synthetic")
+def synthetic_dataset(n_prompts: int = 64, batch_prompts: int = 4,
+                      seed: int = 0, host_id: int = 0,
+                      n_hosts: int = 1) -> PromptDataset:
+    """Deterministic compositional prompt corpus wrapped in a PromptDataset
+    (the framework's config-addressable default training distribution)."""
+    return PromptDataset(synthetic_prompts(n_prompts, seed=seed),
+                         batch_size=batch_prompts, seed=seed,
+                         host_id=host_id, n_hosts=n_hosts)

@@ -1,86 +1,42 @@
-"""Flow-matching sampling service: batched prompt requests → latents.
+"""Flow-matching sampling service — a thin shell over the Experiment API.
 
-Demonstrates the serving side of the framework: condition embeddings come
-from the preprocessing cache (or a live encoder), sampling runs any
-registered SDE/ODE scheduler, and requests are micro-batched.
+Requests are micro-batched through :class:`repro.api.FlowSampler`; backbone
+and solver are registry names, so any registered combination serves.
 
   PYTHONPATH=src python -m repro.launch.serve --arch flux_dit --reduced \\
-      --sde ode --num-steps 8 --requests 16
+      --sde ode --requests 16 --set flow.num_steps=8
 """
 from __future__ import annotations
 
-import argparse
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
-from repro.config import FlowRLConfig
-from repro.core import schedulers
-from repro.core.preprocess import ConditionProvider
-from repro.core.rollout import rollout
-from repro.data import synthetic_prompts
-from repro.models import params as params_lib
-from repro.models.flow import FlowAdapter
+from repro.api import Experiment, FlowSampler  # noqa: F401 (re-export)
+from repro.api.experiment import default_cli_config
+from repro.config import replace
 
 
-class FlowSampler:
-    """Batched sampling server over a FlowAdapter."""
-
-    def __init__(self, arch_cfg, flow_cfg, *, key, max_batch: int = 8):
-        self.adapter = FlowAdapter(arch_cfg, flow_cfg)
-        self.scheduler = schedulers.build(flow_cfg.sde_type, flow_cfg.eta)
-        self.flow_cfg = flow_cfg
-        self.params = params_lib.init(self.adapter.spec(), key)
-        self.max_batch = max_batch
-        self._rollout = jax.jit(
-            lambda p, cond, k: rollout(self.adapter, p, cond, k,
-                                       self.scheduler, flow_cfg.num_steps))
-
-    def serve(self, cond: jax.Array, key: jax.Array) -> jax.Array:
-        """cond: (N, Lc, D) -> latents (N, Lt, ld); micro-batched."""
-        outs = []
-        N = cond.shape[0]
-        for i in range(0, N, self.max_batch):
-            chunk = cond[i:i + self.max_batch]
-            pad = self.max_batch - chunk.shape[0]
-            if pad:
-                chunk = jnp.pad(chunk, ((0, pad), (0, 0), (0, 0)))
-            traj = self._rollout(self.params, chunk,
-                                 jax.random.fold_in(key, i))
-            outs.append(traj.x0[:chunk.shape[0] - pad if pad else None])
-        return jnp.concatenate(outs, axis=0)[:N]
+def serve_profile():
+    """Serving defaults: deterministic ODE solver, small latent geometry."""
+    cfg = default_cli_config()
+    return replace(cfg, flow=replace(cfg.flow, sde_type="ode", eta=0.3))
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="flux_dit",
-                    choices=configs.ARCH_IDS + configs.PAPER_ARCHS)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--sde", default="ode")
-    ap.add_argument("--eta", type=float, default=0.3)
-    ap.add_argument("--num-steps", type=int, default=8)
+def main(argv=None) -> None:
+    ap = Experiment.cli_parser("Flow-Factory sampling service")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=8)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
+    if args.requests < 1:
+        ap.error("--requests must be >= 1")
+    exp = Experiment.from_args(args, base=serve_profile())
 
-    arch_cfg = (configs.get_reduced(args.arch) if args.reduced
-                else configs.get(args.arch))
-    flow_cfg = FlowRLConfig(sde_type=args.sde, eta=args.eta,
-                            num_steps=args.num_steps, latent_tokens=16,
-                            latent_dim=8)
-    key = jax.random.PRNGKey(0)
-    sampler = FlowSampler(arch_cfg, flow_cfg, key=key,
-                          max_batch=args.max_batch)
-    provider = ConditionProvider(preprocessing=False,
-                                 encoder_kw=dict(cond_dim=512, cond_len=16))
-
+    from repro.data import synthetic_prompts
     prompts = synthetic_prompts(args.requests)
     t0 = time.time()
-    cond = provider.get(prompts)["cond"]
-    latents = sampler.serve(cond, key)
+    latents = exp.serve(prompts, max_batch=args.max_batch)
     dt = time.time() - t0
     print(f"served {args.requests} requests in {dt:.2f}s "
           f"({args.requests/dt:.1f} req/s); latents {latents.shape}, "

@@ -1,12 +1,20 @@
-"""Dry-run sweep driver: every (arch × shape) × {single-pod, multi-pod} in a
-fresh subprocess (clean XLA_FLAGS / device-count state per run), resumable —
-existing artifact JSONs are skipped.
+"""Sweep driver over the Experiment front door.
 
-  PYTHONPATH=src python -m repro.launch.sweep [--multi-pod-only] [--archs a,b]
+Default (``train``) mode: expand a config grid of dotted overrides and run
+every combination through ``repro.launch.train`` in a fresh subprocess
+(clean XLA state per run), resumable — combos with an existing artifact
+JSON are skipped.
+
+  PYTHONPATH=src python -m repro.launch.sweep --reduced --steps 4 \\
+      --grid flow.trainer_type=flow_grpo,awm --grid flow.eta=0.3,0.7
+
+``--mode dryrun`` preserves the historical (arch × shape) dry-run matrix
+consumed by benchmarks/report.py.
 """
 from __future__ import annotations
 
 import argparse
+import itertools
 import json
 import os
 import subprocess
@@ -17,7 +25,59 @@ from repro import configs
 from repro.config import INPUT_SHAPES
 
 OUT_DIR = "experiments/dryrun"
+TRAIN_OUT_DIR = "experiments/sweep"
 
+
+# ---------------------------------------------------------------- train grid
+
+def grid_combos(grid_specs):
+    """``["a=1,2", "b=x"]`` -> [{"a":"1","b":"x"}, {"a":"2","b":"x"}]."""
+    axes = []
+    seen = set()
+    for spec in grid_specs:
+        path, _, vals = spec.partition("=")
+        if not vals:
+            raise SystemExit(f"bad --grid {spec!r}: expected PATH=V1,V2,...")
+        if path in seen:   # dict(combo) would silently drop the first axis
+            raise SystemExit(f"duplicate --grid axis {path!r}: merge the "
+                             "values into one PATH=V1,V2,... spec")
+        seen.add(path)
+        axes.append([(path, v) for v in vals.split(",")])
+    return [dict(combo) for combo in itertools.product(*axes)]
+
+
+def combo_slug(combo) -> str:
+    return "__".join(f"{p.replace('.', '_')}={v}" for p, v in
+                     sorted(combo.items())) or "base"
+
+
+def run_train_combo(combo, args) -> dict:
+    slug = combo_slug(combo)
+    art = os.path.join(TRAIN_OUT_DIR, slug + ".json")
+    if os.path.exists(art):
+        return {"skipped": True}
+    cmd = [sys.executable, "-m", "repro.launch.train"]
+    if args.steps is not None:           # None: respect the config's steps
+        cmd += ["--steps", str(args.steps)]
+    if args.config:
+        cmd += ["--config", args.config]
+    if args.reduced:
+        cmd.append("--reduced")
+    for path, val in combo.items():
+        cmd += ["--set", f"{path}={val}"]
+    cmd += ["--set", f"loop.log_file={art}",
+            "--set", f"loop.ckpt_dir={os.path.join(TRAIN_OUT_DIR, slug)}"]
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)           # clean XLA state per run
+    t0 = time.time()
+    r = subprocess.run(cmd, capture_output=True, text=True,
+                       timeout=args.timeout, env=env, cwd=os.getcwd())
+    ok = r.returncode == 0 and os.path.exists(art)
+    return {"ok": ok, "wall_s": round(time.time() - t0, 1),
+            "stderr_tail": r.stderr[-2000:] if not ok else ""}
+
+
+# ------------------------------------------------------------- dryrun matrix
 
 def artifact_path(arch: str, shape: str, multi_pod: bool,
                   variant: str = "baseline") -> str:
@@ -49,8 +109,25 @@ def run_pair(arch: str, shape: str, multi_pod: bool, *, timeout: int = 3600,
             "stderr_tail": r.stderr[-2000:] if not ok else ""}
 
 
+def _report(results) -> None:
+    n_fail = sum(1 for _, r in results if not (r.get("ok") or
+                                               r.get("skipped")))
+    print(f"\nsweep done: {len(results)} runs, {n_fail} failures")
+    sys.exit(1 if n_fail else 0)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="train", choices=["train", "dryrun"])
+    # train-grid mode
+    ap.add_argument("--grid", action="append", default=[],
+                    metavar="DOTTED.PATH=V1,V2",
+                    help="sweep axis of --set overrides (repeatable)")
+    ap.add_argument("--config", default="", help="base RunConfig JSON")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override steps per combo (default: the config's)")
+    # dryrun mode
     ap.add_argument("--archs", default=",".join(configs.ARCH_IDS))
     ap.add_argument("--shapes", default=",".join(INPUT_SHAPES))
     ap.add_argument("--meshes", default="single,multi")
@@ -60,15 +137,28 @@ def main() -> None:
                     help="comma-separated KEY=VAL extra env for dryrun")
     args = ap.parse_args()
 
-    extra_env = dict(kv.split("=", 1) for kv in args.env.split(",") if kv)
-    archs = args.archs.split(",")
-    shapes = args.shapes.split(",")
-    meshes = args.meshes.split(",")
-
     results = []
-    for arch in archs:
-        for shape in shapes:
-            for mesh in meshes:
+    if args.mode == "train":
+        os.makedirs(TRAIN_OUT_DIR, exist_ok=True)
+        for combo in grid_combos(args.grid):
+            tag = combo_slug(combo)
+            try:
+                r = run_train_combo(combo, args)
+            except subprocess.TimeoutExpired:
+                r = {"ok": False, "stderr_tail": "TIMEOUT"}
+            status = ("skip" if r.get("skipped")
+                      else "ok" if r.get("ok") else "FAIL")
+            print(f"[{status}] {tag}"
+                  + (f"  ({r['wall_s']}s)" if "wall_s" in r else "")
+                  + ("\n" + r.get("stderr_tail", "")
+                     if status == "FAIL" else ""), flush=True)
+            results.append((tag, r))
+        _report(results)
+
+    extra_env = dict(kv.split("=", 1) for kv in args.env.split(",") if kv)
+    for arch in args.archs.split(","):
+        for shape in args.shapes.split(","):
+            for mesh in args.meshes.split(","):
                 multi = mesh == "multi"
                 tag = f"{arch} × {shape} × {'2pod' if multi else '1pod'}"
                 try:
@@ -84,10 +174,7 @@ def main() -> None:
                     print(f"[FAIL] {tag}\n{r.get('stderr_tail', '')}",
                           flush=True)
                 results.append((tag, r))
-    n_fail = sum(1 for _, r in results if not (r.get("ok") or
-                                               r.get("skipped")))
-    print(f"\nsweep done: {len(results)} pairs, {n_fail} failures")
-    sys.exit(1 if n_fail else 0)
+    _report(results)
 
 
 if __name__ == "__main__":

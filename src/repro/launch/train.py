@@ -1,138 +1,37 @@
-"""Flow-Factory training launcher — the paper's end-to-end driver.
+"""Flow-Factory training launcher — a thin shell over the Experiment API.
 
-Phases (paper §2.2 two-phase design):
-  1. preprocess: encode every prompt once, cache to disk, frozen encoders
-     are then offloaded (never instantiated again).
-  2. train: <trainer_type> RL fine-tuning of the selected backbone against
-     the configured rewards, checkpointing every --save-every steps.
+One declarative :class:`RunConfig` drives both phases (paper §2.2):
+preprocess-and-cache the prompt corpus, then RL fine-tune the selected
+backbone via the shared :class:`repro.api.TrainLoop` with full-state
+checkpointing (params + optimizer) and auto-resume.
 
-  PYTHONPATH=src python -m repro.launch.train --arch flux_dit --reduced \\
-      --trainer flow_grpo --sde flow_sde --steps 100
+Everything is config: pass a JSON file and/or dotted overrides — the
+convenience flags (``--arch/--trainer/--sde``) derive their choices from
+the registry, so they can never drift from what is registered.
+
+  PYTHONPATH=src python -m repro.launch.train --reduced --steps 2
+  PYTHONPATH=src python -m repro.launch.train --config run.json \\
+      --set flow.eta=0.5 --set optim.lr=3e-4 --set loop.log_file=log.json
+
+The equivalent programmatic path is ``Experiment.from_file("run.json")``
+(see ROADMAP.md "Running experiments").
 """
 from __future__ import annotations
 
-import argparse
-import json
-import os
-import time
-
-import jax
-import numpy as np
-
-from repro import checkpoint, configs, registry
-from repro.config import FlowRLConfig, OptimConfig, RewardSpec
-from repro.core.preprocess import (ConditionProvider, PreprocessCache,
-                                   preprocess_dataset)
-from repro.data import PromptDataset, synthetic_prompts
+from repro.api import Experiment
 
 
-def build_reward_specs(names: str, latent_tokens: int, latent_dim: int):
-    out = []
-    for entry in names.split(","):
-        name, _, w = entry.partition(":")
-        args = {}
-        if name in ("text_render",):
-            args = {"latent_dim": latent_dim, "latent_tokens": latent_tokens}
-        elif name in ("pickscore", "pref_group"):
-            args = {"latent_dim": latent_dim}
-        out.append(RewardSpec(name, float(w or 1.0), args=args))
-    return tuple(out)
-
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="flux_dit",
-                    choices=configs.ARCH_IDS + configs.PAPER_ARCHS)
-    ap.add_argument("--reduced", action="store_true",
-                    help="use the ≤2-layer reduced config (CPU-runnable)")
-    ap.add_argument("--trainer", default="flow_grpo",
-                    choices=["flow_grpo", "mix_grpo", "grpo_guard", "nft",
-                             "awm"])
-    ap.add_argument("--sde", default="flow_sde",
-                    choices=["flow_sde", "dance_sde", "cps", "ode"])
-    ap.add_argument("--eta", type=float, default=0.7)
-    ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--prompts", type=int, default=64)
-    ap.add_argument("--batch-prompts", type=int, default=4)
-    ap.add_argument("--group-size", type=int, default=4)
-    ap.add_argument("--num-steps", type=int, default=8)
-    ap.add_argument("--latent-tokens", type=int, default=16)
-    ap.add_argument("--latent-dim", type=int, default=8)
-    ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--rewards", default="text_render:1.0")
-    ap.add_argument("--agg", default="weighted_sum",
-                    choices=["weighted_sum", "gdpo"])
-    ap.add_argument("--no-preprocessing", action="store_true",
-                    help="paper Table 2 baseline: re-encode every step")
-    ap.add_argument("--cache-dir", default="cache")
-    ap.add_argument("--ckpt-dir", default="checkpoints")
-    ap.add_argument("--save-every", type=int, default=50)
-    ap.add_argument("--log-file", default="")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    arch_cfg = (configs.get_reduced(args.arch) if args.reduced
-                else configs.get(args.arch))
-    flow_cfg = FlowRLConfig(
-        trainer_type=args.trainer, sde_type=args.sde, eta=args.eta,
-        num_steps=args.num_steps, group_size=args.group_size,
-        latent_tokens=args.latent_tokens, latent_dim=args.latent_dim,
-        advantage_agg=args.agg,
-        rewards=build_reward_specs(args.rewards, args.latent_tokens,
-                                   args.latent_dim),
-        preprocessing=not args.no_preprocessing, cache_dir=args.cache_dir)
-    opt_cfg = OptimConfig(lr=args.lr, total_steps=args.steps,
-                          warmup_steps=max(2, args.steps // 20))
-
-    key = jax.random.PRNGKey(args.seed)
-    prompts = synthetic_prompts(args.prompts, seed=args.seed)
-
-    # ---- phase 1: preprocessing ----
-    t0 = time.time()
-    if flow_cfg.preprocessing:
-        cache = PreprocessCache(args.cache_dir)
-        n = preprocess_dataset(prompts, cache)
-        provider = ConditionProvider(preprocessing=True, cache=cache)
-        print(f"[preprocess] cached {n} new prompts in "
-              f"{time.time()-t0:.1f}s; frozen encoders offloaded")
-    else:
-        provider = ConditionProvider(preprocessing=False)
-        print("[preprocess] DISABLED — encoders stay resident (baseline)")
-
-    # ---- phase 2: RL training ----
-    trainer = registry.build("trainer", args.trainer, arch_cfg, flow_cfg,
-                             opt_cfg, key=key)
-    print(f"[train] {args.trainer} on {arch_cfg.name} "
-          f"({arch_cfg.n_params()/1e6:.1f}M params), sde={args.sde}, "
-          f"rewards={[s.reward_type for s in flow_cfg.rewards]} "
-          f"(unique loads: {trainer.loader.unique_loads})")
-
-    ds = PromptDataset(prompts, batch_size=args.batch_prompts,
-                       seed=args.seed)
-    log = []
-    t_train = time.time()
-    for it, batch_prompts in zip(range(args.steps), ds.infinite()):
-        t_it = time.time()
-        cond = provider.get(batch_prompts)["cond"]
-        m = trainer.step(cond, key, it=it)
-        row = {"step": it, "reward": float(m["reward_mean"]),
-               "loss": float(m["loss"]),
-               "grad_norm": float(m["grad_norm"]),
-               "encode_resident": provider.encoder_resident,
-               "dt": round(time.time() - t_it, 3)}
-        log.append(row)
-        if it % 10 == 0 or it == args.steps - 1:
-            print(f"  step {it:4d}  reward={row['reward']:+.4f}  "
-                  f"loss={row['loss']:+.4f}  dt={row['dt']:.2f}s")
-        if args.save_every and (it + 1) % args.save_every == 0:
-            checkpoint.save_checkpoint(args.ckpt_dir, it + 1,
-                                       trainer.state.params)
-    print(f"[train] {args.steps} steps in {time.time()-t_train:.1f}s; "
-          f"reward {log[0]['reward']:+.4f} -> {log[-1]['reward']:+.4f}")
-    if args.log_file:
-        os.makedirs(os.path.dirname(args.log_file) or ".", exist_ok=True)
-        with open(args.log_file, "w") as f:
-            json.dump(log, f)
+def main(argv=None) -> None:
+    exp = Experiment.from_cli(argv)
+    d = exp.describe()
+    print(f"[train] {d['trainer']['name']} on {d['arch']['name']} "
+          f"({d['arch']['n_params']/1e6:.1f}M params), "
+          f"sde={d['scheduler']['name']}, rewards={d['rewards']}")
+    result = exp.train()
+    hist = result["history"]
+    if hist:
+        print(f"[train] steps {result['start_step']}..{result['final_step']}"
+              f"; reward {hist[0]['reward']:+.4f} -> {hist[-1]['reward']:+.4f}")
 
 
 if __name__ == "__main__":

@@ -11,7 +11,7 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro import optim
+from repro import optim, registry
 from repro.config import ArchConfig, InputShape, OptimConfig, RunConfig
 from repro.models import params as params_lib
 from repro.models.backbone import Backbone
@@ -71,6 +71,12 @@ def make_train_step(cfg: ArchConfig, opt_cfg: OptimConfig, *,
                     window: int = 0, remat: bool = True):
     model = Backbone(cfg)
     lr_fn = optim.make_schedule(opt_cfg)
+    # same registry-selected optimizer as the RL trainers, so one
+    # OptimConfig means the same thing on both training paths.  NOTE:
+    # callers construct the matching state (TrainState.opt) themselves —
+    # a newly registered optimizer must keep the AdamWState (step, mu, nu)
+    # layout or also take over the init sites (tests, launch/specs).
+    optimizer = registry.build("optimizer", opt_cfg.optimizer)
     n_pre = model.n_prefix
 
     def train_step(state: TrainState, batch: Dict[str, jax.Array]
@@ -91,8 +97,8 @@ def make_train_step(cfg: ArchConfig, opt_cfg: OptimConfig, *,
             loss_fn, has_aux=True)(state.params)
         grads, gnorm = optim.clip_by_global_norm(grads, opt_cfg.grad_clip)
         lr = lr_fn(state.opt.step)
-        new_p, new_opt = optim.adamw_update(state.params, grads, state.opt,
-                                            opt_cfg, lr)
+        new_p, new_opt = optimizer.update(state.params, grads, state.opt,
+                                          opt_cfg, lr)
         metrics = {"loss": total, "ce": ce, "grad_norm": gnorm, "lr": lr}
         metrics.update(aux)
         return TrainState(new_p, new_opt), metrics

@@ -1,6 +1,17 @@
+from repro import registry
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
 from repro.optim.schedule import make_schedule
 from repro.optim.clip import global_norm, clip_by_global_norm
 
+
+@registry.register("optimizer", "adamw")
+class AdamW:
+    """Registry front for the from-scratch AdamW (init/update pair);
+    selected via ``OptimConfig.optimizer`` so alternative optimizers plug
+    in without touching any trainer."""
+    init = staticmethod(adamw_init)
+    update = staticmethod(adamw_update)
+
+
 __all__ = ["AdamWState", "adamw_init", "adamw_update", "make_schedule",
-           "global_norm", "clip_by_global_norm"]
+           "global_norm", "clip_by_global_norm", "AdamW"]

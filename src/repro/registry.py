@@ -16,7 +16,8 @@ Usage::
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Iterable, Tuple
+import inspect
+from typing import Any, Callable, Dict, Iterable, Mapping, Tuple, Union
 
 # kind -> name -> class/factory
 _REGISTRY: Dict[str, Dict[str, Any]] = {}
@@ -63,7 +64,8 @@ def _autoload() -> None:
     import importlib
     for mod in ("repro.core.schedulers", "repro.core.trainers",
                 "repro.core.rewards", "repro.models.flow",
-                "repro.models.frontends"):
+                "repro.models.frontends", "repro.configs",
+                "repro.data.prompts", "repro.optim"):
         importlib.import_module(mod)
 
 
@@ -95,3 +97,104 @@ def items(kind: str) -> Iterable[Tuple[str, Any]]:
 
 def is_registered(kind: str, name: str) -> bool:
     return name in _REGISTRY.get(kind, {})
+
+
+# ---------------------------------------------------------------------------
+# Config-driven construction + introspection (the Experiment front door)
+# ---------------------------------------------------------------------------
+
+#: a component spec: either a bare registry name or a nested dict
+#:   {"type": <name>, "args": {<kwarg>: <value-or-nested-spec>, ...}}
+#: nested specs inside ``args`` additionally carry a "kind" key so the
+#: registry knows which bucket to resolve them from.
+Spec = Union[str, Mapping[str, Any]]
+
+
+def _normalize_spec(kind: str, spec: Spec) -> Tuple[str, Dict[str, Any]]:
+    if isinstance(spec, str):
+        return spec, {}
+    if isinstance(spec, Mapping):
+        extra = set(spec) - {"type", "name", "args", "kind"}
+        if extra:
+            raise RegistryError(
+                f"bad {kind} spec: unknown key(s) {sorted(extra)}; a spec is "
+                "a name or {'type': <name>, 'args': {...}}")
+        name = spec.get("type") or spec.get("name")
+        if not isinstance(name, str):
+            raise RegistryError(f"bad {kind} spec {spec!r}: missing 'type'")
+        args = spec.get("args", {})
+        if not isinstance(args, Mapping):
+            raise RegistryError(f"bad {kind} spec {name!r}: 'args' must be a "
+                                f"dict, got {type(args).__name__}")
+        return name, dict(args)
+    raise RegistryError(f"bad {kind} spec {spec!r}: expected a registry name "
+                        "or a {'type': ..., 'args': {...}} dict")
+
+
+def _is_nested_spec(v: Any) -> bool:
+    return isinstance(v, Mapping) and "kind" in v and ("type" in v
+                                                       or "name" in v)
+
+
+def _validate_call(kind: str, name: str, obj: Any, args: Tuple,
+                   kwargs: Dict[str, Any]) -> None:
+    try:
+        sig = inspect.signature(obj)
+    except (TypeError, ValueError):      # builtins / C callables: skip
+        return
+    try:
+        sig.bind(*args, **kwargs)
+    except TypeError as e:
+        accepted = [p.name for p in sig.parameters.values()
+                    if p.kind not in (p.VAR_POSITIONAL, p.VAR_KEYWORD)]
+        raise RegistryError(
+            f"invalid arguments for {kind}:{name}: {e}; accepted "
+            f"parameters: {accepted}") from None
+
+
+def build_from_config(kind: str, spec: Spec, *args: Any, **extra: Any) -> Any:
+    """Instantiate a component from a declarative spec.
+
+    ``spec`` is a registry name or ``{"type": name, "args": {...}}``; arg
+    values that are themselves ``{"kind": ..., "type": ..., "args": ...}``
+    dicts are built recursively.  Arguments are validated against the
+    component signature so a typo fails with the accepted parameter list
+    instead of a deep ``TypeError``."""
+    name, kwargs = _normalize_spec(kind, spec)
+    kwargs = {k: (build_from_config(v["kind"], v) if _is_nested_spec(v)
+                  else v) for k, v in kwargs.items()}
+    overlap = sorted(set(kwargs) & set(extra))
+    if overlap:
+        raise RegistryError(
+            f"{kind}:{name}: argument(s) {overlap} given both in the spec "
+            "and by the caller")
+    kwargs.update(extra)
+    obj = lookup(kind, name)
+    _validate_call(kind, name, obj, args, kwargs)
+    return obj(*args, **kwargs)
+
+
+def describe(kind: str, name: str = None) -> Dict[str, Any]:
+    """Introspection helper: constructor signature + one-line doc for one
+    registered component (or, with ``name=None``, for every one of ``kind``)."""
+    if name is None:
+        return {n: describe(kind, n) for n in names(kind)}
+    obj = lookup(kind, name)
+    doc = (inspect.getdoc(obj) or "").split("\n", 1)[0]
+    params: Dict[str, Any] = {}
+    try:
+        sig = inspect.signature(obj)
+    except (TypeError, ValueError):
+        sig = None
+    if sig is not None:
+        for p in sig.parameters.values():
+            if p.kind in (p.VAR_POSITIONAL, p.VAR_KEYWORD):
+                continue
+            params[p.name] = {
+                "default": (None if p.default is p.empty
+                            else repr(p.default)),
+                "required": p.default is p.empty,
+                "annotation": (None if p.annotation is p.empty
+                               else str(p.annotation)),
+            }
+    return {"kind": kind, "name": name, "doc": doc, "params": params}

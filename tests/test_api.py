@@ -1,0 +1,248 @@
+"""Experiment front-door tests: native typed config loading, declarative
+registry construction, dotted overrides, end-to-end smoke training, and
+full-state checkpoint→resume bit-identity."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import registry
+from repro.api import Experiment, apply_overrides
+from repro.config import (ArchConfig, ConfigError, DataConfig, FlowRLConfig,
+                          LoopConfig, OptimConfig, RewardSpec, RunConfig,
+                          from_dict, to_dict)
+
+TINY_ENCODER = dict(cond_dim=32, cond_len=4, vocab=256, hidden=64)
+
+
+def tiny_cfg(tmp_path, steps=2, save_every=0, **loop_kw):
+    return RunConfig(
+        arch="flux_dit", reduced=True,
+        flow=FlowRLConfig(num_steps=2, group_size=2, latent_tokens=4,
+                          latent_dim=4, rewards=(),
+                          cache_dir=str(tmp_path / "cache")),
+        optim=OptimConfig(lr=1e-3, total_steps=8, warmup_steps=1),
+        data=DataConfig(n_prompts=8, batch_prompts=2, encoder=TINY_ENCODER),
+        loop=LoopConfig(steps=steps, save_every=save_every, log_every=0,
+                        ckpt_dir=str(tmp_path / "ckpt"), **loop_kw))
+
+
+# ---------------------------------------------------------------- from_dict
+
+def test_runconfig_json_roundtrip():
+    cfg = RunConfig(
+        arch_overrides={"n_layers": 2},
+        flow=FlowRLConfig(rewards=(
+            RewardSpec("text_render", 1.0, args={"latent_dim": 8}),
+            RewardSpec("pickscore", 0.5, model_id="ps-base"))),
+        data=DataConfig(encoder=TINY_ENCODER))
+    d = json.loads(json.dumps(to_dict(cfg)))
+    assert from_dict(RunConfig, d) == cfg
+
+
+def test_from_dict_unknown_key_strict():
+    with pytest.raises(ConfigError, match="unknown key.*'nope'"):
+        from_dict(RunConfig, {"nope": 1})
+
+
+def test_from_dict_nested_error_has_path():
+    with pytest.raises(ConfigError, match="optim.lr"):
+        from_dict(RunConfig, {"optim": {"lr": "fast"}})
+
+
+def test_from_dict_optional_nested_dataclass():
+    a = from_dict(ArchConfig, {
+        "name": "x", "family": "moe", "n_layers": 2, "d_model": 64,
+        "n_heads": 4, "n_kv_heads": 2, "d_ff": 128, "vocab_size": 100,
+        "moe": {"n_experts": 4, "top_k": 2}})
+    assert a.moe.n_experts == 4 and a.frontend.kind == "none"
+    assert from_dict(ArchConfig, to_dict(a)) == a
+
+
+def test_from_dict_missing_required_field():
+    with pytest.raises(ConfigError, match="name"):
+        from_dict(ArchConfig, {"family": "dense"})
+
+
+# ---------------------------------------------------- registry construction
+
+def test_build_from_config_spec_forms():
+    s1 = registry.build_from_config("scheduler", "ode")
+    s2 = registry.build_from_config("scheduler",
+                                    {"type": "flow_sde",
+                                     "args": {"eta": 0.5}})
+    assert s2.eta == 0.5
+    assert s1.registry_name == "ode"
+
+
+def test_build_from_config_validates_args():
+    with pytest.raises(registry.RegistryError, match="accepted parameters"):
+        registry.build_from_config("scheduler",
+                                   {"type": "flow_sde",
+                                    "args": {"etaa": 0.5}})
+    with pytest.raises(registry.RegistryError, match="spec"):
+        registry.build_from_config("scheduler", {"typ": "flow_sde"})
+
+
+def test_build_from_config_nested_spec():
+    @registry.register("aggregator", "nested_spec_probe", override=True)
+    def probe(scheduler=None):
+        return scheduler
+
+    built = registry.build_from_config(
+        "aggregator",
+        {"type": "nested_spec_probe",
+         "args": {"scheduler": {"kind": "scheduler", "type": "flow_sde",
+                                "args": {"eta": 0.25}}}})
+    assert built.eta == 0.25          # inner spec built recursively
+
+
+def test_describe_introspection():
+    info = registry.describe("scheduler", "flow_sde")
+    assert "eta" in info["params"]
+    assert info["params"]["eta"]["required"] is False
+    all_trainers = registry.describe("trainer")
+    assert "flow_grpo" in all_trainers and "awm" in all_trainers
+
+
+def test_registry_derived_kinds_present():
+    # archs, datasets and optimizers are registry citizens now
+    assert "flux_dit" in registry.names("arch")
+    assert "smollm-360m" in registry.names("arch")
+    assert "synthetic" in registry.names("dataset")
+    assert "adamw" in registry.names("optimizer")
+
+
+# ------------------------------------------------------------ CLI overrides
+
+def test_apply_overrides_typed():
+    cfg = RunConfig()
+    out = apply_overrides(cfg, ["flow.eta=0.5", "optim.lr=3e-4",
+                                "flow.preprocessing=false",
+                                "arch=flux_dit", "loop.steps=7"])
+    assert out.flow.eta == 0.5 and out.optim.lr == 3e-4
+    assert out.flow.preprocessing is False
+    assert out.arch == "flux_dit" and out.loop.steps == 7
+    # JSON values for structured fields
+    out = apply_overrides(cfg, [
+        'flow.rewards=[{"reward_type": "latent_norm", "weight": 0.1}]'])
+    assert out.flow.rewards == (RewardSpec("latent_norm", 0.1),)
+
+
+def test_apply_overrides_unknown_field():
+    with pytest.raises(ConfigError, match="valid fields"):
+        apply_overrides(RunConfig(), ["flow.etaa=0.5"])
+
+
+def test_from_cli_choices_and_overrides():
+    exp = Experiment.from_cli(["--reduced", "--trainer", "awm",
+                               "--sde", "ode", "--steps", "3",
+                               "--set", "flow.eta=0.1"])
+    assert exp.cfg.reduced is True
+    assert exp.cfg.flow.trainer_type == "awm"
+    assert exp.cfg.flow.sde_type == "ode"
+    assert exp.cfg.loop.steps == 3 and exp.cfg.optim.total_steps == 3
+    assert exp.cfg.flow.eta == 0.1
+    # convenience-flag choices come from the registry, not a literal list
+    parser = Experiment.cli_parser()
+    trainer_action = next(a for a in parser._actions
+                          if a.dest == "trainer")
+    assert tuple(trainer_action.choices) == registry.names("trainer")
+
+
+# ------------------------------------------------------------------- smoke
+
+def test_experiment_smoke_train(tmp_path):
+    exp = Experiment.from_config(tiny_cfg(tmp_path, steps=2))
+    result = exp.train()
+    assert len(result["history"]) == 2
+    for row in result["history"]:
+        assert np.isfinite(row["reward"]) and np.isfinite(row["loss"])
+    # preprocessing kept the frozen encoder offloaded
+    assert result["history"][-1]["encode_resident"] is False
+
+
+def test_experiment_reward_args_autocompleted(tmp_path):
+    cfg = tiny_cfg(tmp_path)
+    cfg = apply_overrides(cfg, [
+        'flow.rewards=[{"reward_type": "text_render"}]'])
+    exp = Experiment.from_config(cfg)
+    spec = exp.flow.rewards[0]
+    assert spec.args["latent_dim"] == 4 and spec.args["latent_tokens"] == 4
+    assert spec.args["cond_dim"] == 32
+
+
+def test_experiment_serve(tmp_path):
+    exp = Experiment.from_config(tiny_cfg(tmp_path))
+    lat = exp.serve(["a fox in watercolor", "a robot at golden hour"],
+                    max_batch=2)
+    assert lat.shape == (2, 4, 4)
+    assert np.isfinite(np.asarray(lat)).all()
+
+
+def test_serve_uses_trained_params(tmp_path):
+    exp = Experiment.from_config(tiny_cfg(tmp_path, steps=2))
+    exp.train()
+    sampler = exp.build_sampler()
+    trained = jax.tree.leaves(exp.build_trainer().state.params)
+    served = jax.tree.leaves(sampler.params)
+    assert any(np.asarray(a.astype(jnp.float32)).sum()
+               == np.asarray(b.astype(jnp.float32)).sum()
+               for a, b in zip(trained, served))
+    # and they are literally the same arrays, not a fresh init
+    assert served[0] is trained[0]
+
+
+# -------------------------------------------------------- checkpoint/resume
+
+def _state_leaves(state):
+    out = []
+    for x in jax.tree.leaves(state):
+        arr = np.asarray(jax.device_get(x))
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+        out.append(arr)
+    return out
+
+
+def test_checkpoint_resume_bit_identical(tmp_path):
+    straight = Experiment.from_config(
+        tiny_cfg(tmp_path / "a", steps=4, save_every=2)).train()
+    # interrupted: 2 steps, checkpoint, then a fresh process-equivalent
+    # resumes from the saved full RLState and finishes
+    Experiment.from_config(tiny_cfg(tmp_path / "b", steps=2,
+                                    save_every=2)).train()
+    resumed = Experiment.from_config(
+        tiny_cfg(tmp_path / "b", steps=4, save_every=2)).train()
+    assert resumed["start_step"] == 2
+    la, lb = _state_leaves(straight["state"]), _state_leaves(resumed["state"])
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_resume_restores_optimizer_state(tmp_path):
+    exp = Experiment.from_config(tiny_cfg(tmp_path, steps=2, save_every=2))
+    exp.train()
+    exp2 = Experiment.from_config(tiny_cfg(tmp_path, steps=2, save_every=2))
+    result = exp2.train()   # nothing left to do, but state must be restored
+    assert result["start_step"] == 2
+    assert int(result["state"].opt.step) == 2
+
+
+def test_resume_refuses_mismatched_config(tmp_path):
+    Experiment.from_config(tiny_cfg(tmp_path, steps=2, save_every=2)).train()
+    other = apply_overrides(tiny_cfg(tmp_path, steps=4, save_every=2),
+                            ["flow.trainer_type=awm"])
+    with pytest.raises(ConfigError, match="different experiment"):
+        Experiment.from_config(other).train()
+    # resume=False into a dir with existing checkpoints would mix runs
+    with pytest.raises(ConfigError, match="already contains checkpoints"):
+        Experiment.from_config(other).train(resume=False)
+    # fresh run works once it stops writing into the foreign ckpt dir
+    clean = apply_overrides(other, ["loop.save_every=0"])
+    res = Experiment.from_config(clean).train(resume=False)
+    assert res["start_step"] == 0

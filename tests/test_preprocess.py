@@ -57,3 +57,32 @@ def test_preprocess_is_resumable(tmp_path):
     enc = FrozenTextEncoder(**ENC_KW)
     assert preprocess_dataset(prompts[:3], cache, encoder=enc) == 3
     assert preprocess_dataset(prompts, cache, encoder=enc) == 3  # only new
+
+
+def test_cache_miss_is_clear_keyerror(tmp_path):
+    """A miss names the missing prompt instead of leaking a bare
+    FileNotFoundError from the cache internals."""
+    cache = PreprocessCache(str(tmp_path))
+    provider = ConditionProvider(preprocessing=True, cache=cache)
+    with pytest.raises(KeyError, match="unseen prompt"):
+        provider.get(["unseen prompt"])
+    with pytest.raises(KeyError, match="encode_on_miss"):
+        provider.get(["unseen prompt"])
+    assert not provider.encoder_resident   # failure didn't load the tower
+
+
+def test_cache_miss_encode_on_miss(tmp_path):
+    prompts = synthetic_prompts(4)
+    cache = PreprocessCache(str(tmp_path))
+    preprocess_dataset(prompts[:2], cache, encoder=FrozenTextEncoder(**ENC_KW))
+    provider = ConditionProvider(preprocessing=True, cache=cache,
+                                 encoder_kw=ENC_KW, encode_on_miss=True)
+    out = provider.get(prompts)            # 2 hits + 2 lazily encoded
+    assert out["cond"].shape[0] == 4
+    assert provider.encoder_resident       # opt-in forfeits the offload
+    assert all(cache.has(p) for p in prompts)   # misses were backfilled
+    # backfilled entries match what a fresh full preprocess would produce
+    live = ConditionProvider(preprocessing=False, encoder_kw=ENC_KW)
+    np.testing.assert_allclose(np.asarray(out["cond"]),
+                               np.asarray(live.get(prompts)["cond"]),
+                               rtol=1e-6)
