@@ -1,16 +1,22 @@
-# Tier-1 verification: dependency hygiene + the full test suite.
+# Tier-1 verification: dependency hygiene + the full test suite, plus both
+# alternate dispatch configurations.
 #
 #   make verify      - what CI runs; catches the dacite-class regression
-#                      (a third-party import sneaking into the core path)
+#                      (a third-party import sneaking into the core path),
+#                      then re-exercises the Pallas interpret dispatch layer
+#                      and the 4-host-device data-parallel configuration
 #   make smoke       - 2-step end-to-end training run through the Experiment
 #                      front door (launch CLI + config-file path)
+#   make smoke-dist  - same, sharded over 4 faked CPU devices with
+#                      gradient-accumulation microbatching
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+DIST_FLAGS := --xla_force_host_platform_device_count=4
 
-.PHONY: verify deps-check test smoke
+.PHONY: verify deps-check test test-interpret test-dist smoke smoke-dist
 
-verify: deps-check test
+verify: deps-check test test-interpret test-dist
 
 # Core modules must import on a bare jax+numpy interpreter: no dacite, and
 # zstandard/msgpack/hypothesis only ever loaded behind soft gates.
@@ -20,8 +26,32 @@ deps-check:
 test:
 	$(PY) -m pytest -x -q
 
+# Pallas dispatch layer: per-kernel oracles plus full trainer steps with
+# REPRO_PALLAS=interpret (reward_improves is excluded — 45 interpret-mode
+# steps add ~10 min for a signal the kernel mode doesn't change).
+test-interpret:
+	REPRO_PALLAS=interpret $(PY) -m pytest -x -q tests/test_kernels.py \
+	    tests/test_trainers.py -k "not reward_improves"
+
+# Data-parallel configuration: the in-process distributed tests re-run ON
+# 4 faked host devices (the subprocess equivalence tests are deselected —
+# they spawn their own 4-device children and already ran in `make test`),
+# then the sharded + microbatched launch CLI end-to-end.
+test-dist:
+	XLA_FLAGS="$(DIST_FLAGS)" $(PY) -m pytest -x -q \
+	    tests/test_distributed.py \
+	    -k "not sharded_training and not shard_map"
+	$(MAKE) smoke-dist
+
 smoke:
 	$(PY) -m repro.launch.train --reduced --steps 2 \
 	    --set flow.num_steps=2 --set flow.group_size=2 \
 	    --set flow.cache_dir=/tmp/repro-smoke/cache \
 	    --set loop.ckpt_dir=/tmp/repro-smoke/ckpt
+
+smoke-dist:
+	rm -rf /tmp/repro-smoke-dist
+	XLA_FLAGS="$(DIST_FLAGS)" $(PY) -m repro.launch.train --reduced \
+	    --steps 2 --set dist.data_parallel=4 --set dist.microbatch=2 \
+	    --set flow.cache_dir=/tmp/repro-smoke-dist/cache \
+	    --set loop.ckpt_dir=/tmp/repro-smoke-dist/ckpt

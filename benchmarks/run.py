@@ -8,13 +8,14 @@ import traceback
 
 def main() -> None:
     from benchmarks import preprocessing, reward_curves, roofline, \
-        sde_dynamics
+        scaling, sde_dynamics
 
     suites = [
         ("sde_dynamics (paper Table 1)", sde_dynamics.run),
         ("reward_curves (paper Fig 2)", reward_curves.run),
         ("preprocessing (paper Table 2)", preprocessing.run),
         ("roofline (deliverable g)", roofline.run),
+        ("scaling (repro.distributed data-parallel)", scaling.run),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -1,0 +1,82 @@
+"""Benchmark: data-parallel scaling of the RL train step
+(``repro.distributed`` tentpole).
+
+Spawns one subprocess per mesh size (the host-device-count XLA flag must be
+set before jax initializes) with dp ∈ {1, 2, 4} faked CPU devices, trains a
+few reduced-scale steps, and reports mean post-compile step time.  On faked
+CPU host devices all "devices" share the same cores, so this measures
+*overhead* of the sharded path (resharding + collectives + gradient
+accumulation), not speedup — the derived column reports the slowdown factor
+vs dp=1, which should stay near 1 (the subsystem is communication-light:
+params replicated, one grad all-reduce per step).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List
+
+STEPS = 4
+DP_SIZES = (1, 2, 4)
+
+_CHILD = r"""
+import json, time
+import jax, jax.numpy as jnp
+from repro import configs, registry
+from repro.config import DistConfig, FlowRLConfig, OptimConfig, RewardSpec
+
+dp = {dp}
+flow = FlowRLConfig(num_steps=4, group_size=4, latent_tokens=8, latent_dim=8,
+                    clip_range=0.2,
+                    rewards=(RewardSpec("text_render", 1.0,
+                             args={{"latent_dim": 8, "latent_tokens": 8}}),))
+opt = OptimConfig(lr=1e-3, total_steps=50, warmup_steps=2)
+key = jax.random.PRNGKey(0)
+tr = registry.build("trainer", "flow_grpo", configs.get_reduced("flux_dit"),
+                    flow, opt, key=key, dist=DistConfig(data_parallel=dp))
+cond = jax.random.normal(key, (4, 4, 512), jnp.float32)
+tr.step(cond, key, it=0)                         # compile
+t0 = time.time()
+for it in range(1, 1 + {steps}):
+    m = tr.step(cond, key, it=it)
+jax.block_until_ready(tr.state.params)
+dt = (time.time() - t0) / {steps}
+print(json.dumps({{"dp": dp, "devices": jax.local_device_count(),
+                   "step_s": dt}}))
+"""
+
+
+def _child_env(dp: int) -> Dict[str, str]:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={dp}")
+    env["JAX_PLATFORMS"] = "cpu"
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(here, "src")
+    env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else src)
+    return env
+
+
+def run() -> List[Dict]:
+    rows: List[Dict] = []
+    base_s = None
+    for dp in DP_SIZES:
+        code = _CHILD.format(dp=dp, steps=STEPS)
+        proc = subprocess.run([sys.executable, "-c", code],
+                              capture_output=True, text=True,
+                              env=_child_env(dp), timeout=540)
+        if proc.returncode != 0:
+            raise RuntimeError(f"dp={dp} child failed:\n{proc.stderr}")
+        out = json.loads(proc.stdout.strip().splitlines()[-1])
+        if base_s is None:
+            base_s = out["step_s"]
+        rows.append({
+            "name": f"train_step_dp{dp}",
+            "us_per_call": round(out["step_s"] * 1e6, 1),
+            "derived": {"devices": out["devices"],
+                        "overhead_vs_dp1": round(out["step_s"] / base_s, 3)},
+        })
+    return rows

@@ -17,6 +17,7 @@ CORE_MODULES = [
     "repro.checkpoint",
     "repro.core.preprocess",
     "repro.data.prompts",
+    "repro.distributed",
     "repro.optim",
 ]
 

@@ -191,7 +191,7 @@ class Experiment:
             self._trainer = registry.build_from_config(
                 "trainer", self.cfg.flow.trainer_type,
                 self.arch, self.flow, self.cfg.optim,
-                key=key, cond_dim=self.cond_dim)
+                key=key, cond_dim=self.cond_dim, dist=self.cfg.dist)
         return self._trainer
 
     def build_sampler(self, key: Optional[jax.Array] = None,
@@ -224,11 +224,14 @@ class Experiment:
         """The config subset that must match for a checkpoint to be
         resumable.  Loop knobs and schedule length (``--steps`` extends a
         run, moving loop.steps + optim.total_steps/warmup_steps) may
-        legitimately change between restarts; everything else — arch,
-        trainer, rewards, dynamics, data — is guarded against silently
-        resuming someone else's state."""
+        legitimately change between restarts, as may the device layout
+        (``dist`` — a checkpoint written at one data_parallel/microbatch
+        resumes at any other); everything else — arch, trainer, rewards,
+        dynamics, data — is guarded against silently resuming someone
+        else's state."""
         ident = to_dict(self.cfg)
         ident.pop("loop", None)
+        ident.pop("dist", None)
         for k in ("total_steps", "warmup_steps"):
             ident["optim"].pop(k, None)
         # normalize through JSON so tuples (rewards, betas) compare equal
@@ -249,7 +252,8 @@ class Experiment:
             return                       # pre-identity checkpoint: tolerate
         with open(path) as f:
             saved = json.load(f)
-        for k in ("total_steps", "warmup_steps"):   # normalize like current
+        saved.pop("dist", None)                     # normalize like current
+        for k in ("total_steps", "warmup_steps"):
             saved.get("optim", {}).pop(k, None)
         current = self._ckpt_identity()
         if saved != current:
@@ -265,11 +269,16 @@ class Experiment:
         cbs: List[loop_lib.Callback] = []
         if lc.log_every:
             cbs.append(loop_lib.MetricLogger(lc.log_every))
+        # log sink BEFORE checkpoint: if the process dies between the two, a
+        # flushed-but-not-checkpointed step is deduped on resume (prior-row
+        # filter), while the reverse order would lose the row forever (the
+        # checkpoint moves start_step past a step the log never recorded)
+        if lc.log_file:
+            cbs.append(loop_lib.JSONLogSink(lc.log_file,
+                                            lc.log_flush_every))
         if lc.save_every:
             cbs.append(loop_lib.PeriodicCheckpoint(lc.ckpt_dir,
                                                    lc.save_every))
-        if lc.log_file:
-            cbs.append(loop_lib.JSONLogSink(lc.log_file))
         if lc.early_stop_patience:
             cbs.append(loop_lib.EarlyStop(lc.early_stop_metric,
                                           lc.early_stop_patience,

@@ -53,31 +53,52 @@ class MetricLogger(Callback):
 
 
 class JSONLogSink(Callback):
-    """Write the full metric history to ``path`` as JSON at train end.
+    """Maintain the full metric history at ``path`` as a JSON array,
+    flushed incrementally so a crashed/preempted run keeps every step it
+    logged (``PeriodicCheckpoint`` already saved the state; losing the
+    metric history to a crash made the two sinks inconsistent).
+
+    Each flush writes the whole array to a temp file and atomically renames
+    it over ``path`` — a kill mid-write can never leave a truncated log.
+    ``flush_every`` throttles the rewrite for long runs (the final state is
+    always written at train end).
 
     Resume-aware: rows from a previous (interrupted) run that precede this
     run's ``start_step`` are preserved, so the log always covers step 0..N
     even across restarts; a resume with nothing left to do keeps the
     existing log untouched."""
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, flush_every: int = 1):
         self.path = path
+        self.flush_every = max(1, flush_every)
+        self._prior: List[Dict[str, Any]] = []
 
-    def on_train_end(self, loop, history):
-        if not history:
-            return
-        prior = []
+    def on_train_start(self, loop):
+        self._prior = []
         if loop.start_step and os.path.exists(self.path):
             try:
                 with open(self.path) as f:
                     rows = json.load(f)
-                prior = [r for r in rows if r.get("step", -1)
-                         < history[0]["step"]]
+                self._prior = [r for r in rows if r.get("step", -1)
+                               < loop.start_step]
             except (ValueError, OSError):
                 pass                     # unreadable prior log: start fresh
+
+    def _flush(self, history) -> None:
         os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
-        with open(self.path, "w") as f:
-            json.dump(prior + history, f)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self._prior + history, f)
+        os.replace(tmp, self.path)
+
+    def on_step(self, loop, step, metrics):
+        if len(loop.history) % self.flush_every == 0:
+            self._flush(loop.history)
+
+    def on_train_end(self, loop, history):
+        if not history:
+            return                       # nothing ran: leave the log alone
+        self._flush(history)
 
 
 class PeriodicCheckpoint(Callback):

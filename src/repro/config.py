@@ -285,6 +285,24 @@ class ShardingConfig:
 
 
 @dataclass(frozen=True)
+class DistConfig:
+    """Data-parallel training layout (``repro.distributed``).
+
+    ``data_parallel``: device count on the mesh "data" axis — prompts×groups
+    batches are sharded over it. 1 (default) is the single-device path (no
+    mesh is built); 0 means "all local devices".  ``microbatch``: split each
+    ``group_size × num_prompts`` batch into this many sequential
+    gradient-accumulation chunks (0/1 = one full-batch pass).  These are
+    runtime choices, not experiment identity: a checkpoint written at one
+    layout resumes at any other."""
+    data_parallel: int = 1
+    microbatch: int = 0
+    # donate the RLState buffers to the jitted update (params + AdamW
+    # moments rewritten in place instead of double-buffered)
+    donate_state: bool = True
+
+
+@dataclass(frozen=True)
 class DataConfig:
     """Prompt-dataset + frozen-encoder selection for an Experiment."""
     dataset: str = "synthetic"           # registry name ("dataset" kind)
@@ -305,6 +323,10 @@ class LoopConfig:
     save_every: int = 50                 # 0 -> no periodic checkpoints
     ckpt_dir: str = "checkpoints"
     log_file: str = ""                   # non-empty -> JSON metric sink
+    # rewrite the JSON metric log every N steps (crash-safety window); the
+    # sink rewrites the whole history each flush, so long runs should
+    # raise this to bound cumulative IO
+    log_flush_every: int = 1
     resume: bool = True                  # auto-resume from latest checkpoint
     early_stop_patience: int = 0         # 0 -> disabled
     early_stop_metric: str = "reward"    # any TrainLoop history-row key
@@ -324,6 +346,7 @@ class RunConfig:
     sharding: ShardingConfig = field(default_factory=ShardingConfig)
     optim: OptimConfig = field(default_factory=OptimConfig)
     flow: FlowRLConfig = field(default_factory=FlowRLConfig)
+    dist: DistConfig = field(default_factory=DistConfig)
     data: DataConfig = field(default_factory=DataConfig)
     loop: LoopConfig = field(default_factory=LoopConfig)
     param_dtype: str = "bfloat16"

@@ -30,6 +30,13 @@ def group_normalize(r: jax.Array, group_size: int, eps: float = 1e-6
                     ) -> jax.Array:
     """(B,) -> (B,): subtract group mean, divide by group std (GRPO)."""
     B = r.shape[0]
+    if group_size < 1:
+        raise ValueError(f"group_size must be >= 1, got {group_size}")
+    if B % group_size != 0:
+        raise ValueError(
+            f"batch size {B} is not divisible by group_size {group_size}: "
+            "GRPO group statistics need whole groups — use group_repeat to "
+            "build the batch, or fix num_prompts × group_size")
     g = r.astype(F32).reshape(B // group_size, group_size)
     mu = g.mean(axis=1, keepdims=True)
     sd = g.std(axis=1, keepdims=True)

@@ -63,6 +63,8 @@ def rollout(adapter: FlowAdapter, params, cond: jax.Array, key: jax.Array,
 def group_repeat(cond: jax.Array, group_size: int) -> jax.Array:
     """(P, Lc, D) prompts -> (P·G, Lc, D) with each prompt repeated G times
     (consecutive — group g of prompt p occupies rows p·G..p·G+G−1)."""
+    if group_size < 1:
+        raise ValueError(f"group_size must be >= 1, got {group_size}")
     return jnp.repeat(cond, group_size, axis=0)
 
 

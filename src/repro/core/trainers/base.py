@@ -14,8 +14,9 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro import optim, registry
-from repro.config import ArchConfig, FlowRLConfig, OptimConfig, RewardSpec
+from repro import distributed, optim, registry
+from repro.config import (ArchConfig, DistConfig, FlowRLConfig, OptimConfig,
+                          RewardSpec)
 from repro.core import schedulers
 from repro.core.rewards import MultiRewardLoader, compute_advantages
 from repro.core.rollout import Trajectory, group_repeat, rollout
@@ -34,18 +35,44 @@ class RLState(NamedTuple):
 
 
 class BaseTrainer:
-    """Subclass contract: implement ``loss_fn(params, traj, adv, key)``."""
+    """Subclass contract: implement ``loss_fn(params, traj, adv, key)``
+    (plus one trailing argument per pytree returned by ``update_extras``)."""
 
     #: scheduler used for rollouts; GRPO variants need an SDE, NFT/AWM
     #: override to force ODE sampling (solver-agnostic algorithms)
     rollout_sde: bool = True
 
+    #: subclasses whose loss reads buffers aliasing RLState (e.g. NFT's
+    #: reference policy) must opt out of update-buffer donation
+    donate_state_ok: bool = True
+
+    #: subclasses whose loss computes batch-GLOBAL statistics (e.g.
+    #: GRPO-Guard's RatioNorm mean) must opt out of gradient-accumulation
+    #: microbatching — chunked evaluation would silently turn the statistic
+    #: chunk-local and change the training math
+    microbatch_safe: bool = True
+
     def __init__(self, arch_cfg: ArchConfig, flow_cfg: FlowRLConfig,
                  opt_cfg: OptimConfig, *, key: jax.Array,
-                 cond_dim: int = 512, dtype=jnp.bfloat16):
+                 cond_dim: int = 512, dtype=jnp.bfloat16,
+                 dist: Optional[DistConfig] = None):
+        if flow_cfg.group_size < 1:
+            raise ValueError(
+                f"flow.group_size must be >= 1, got {flow_cfg.group_size}")
         self.cfg = arch_cfg
         self.flow = flow_cfg
         self.opt_cfg = opt_cfg
+        self.dist = dist or DistConfig()
+        if self.dist.microbatch < 0:
+            raise ValueError(
+                f"dist.microbatch must be >= 0, got {self.dist.microbatch}")
+        if self.dist.microbatch > 1 and not self.microbatch_safe:
+            raise ValueError(
+                f"{type(self).__name__} computes batch-global loss "
+                "statistics and cannot be microbatched: chunked gradient "
+                "accumulation would make them chunk-local and change the "
+                "training math — set dist.microbatch=0")
+        self.mesh = distributed.data_mesh(self.dist)
         self.adapter = FlowAdapter(arch_cfg, flow_cfg, cond_dim)
         sde_type = flow_cfg.sde_type if self.rollout_sde else "ode"
         self.scheduler = schedulers.build(sde_type, flow_cfg.eta)
@@ -53,13 +80,18 @@ class BaseTrainer:
         params = params_lib.init(self.adapter.spec(), k_p, dtype)
         self.optimizer = registry.build("optimizer", opt_cfg.optimizer)
         self.state = RLState(params, self.optimizer.init(params))
+        if self.mesh is not None:     # replicate state onto the data mesh
+            self.state = jax.device_put(
+                self.state, distributed.replicated(self.mesh))
         specs = flow_cfg.rewards or DEFAULT_REWARDS
         self.loader = MultiRewardLoader(specs, k_r)
         self._lr = optim.make_schedule(opt_cfg)
-        self._sample_jit = jax.jit(self._sample)
-        self._update_jit = jax.jit(self._update)
-        self._rewards_jit = jax.jit(functools.partial(
-            self._rewards, group_size=flow_cfg.group_size))
+        self._sample_jit = distributed.jit_sample(self._sample, self.mesh)
+        self._update_jit = distributed.jit_update(
+            self._update, self.mesh,
+            donate=self.dist.donate_state and self.donate_state_ok)
+        self._rewards_jit = distributed.jit_rewards(functools.partial(
+            self._rewards, group_size=flow_cfg.group_size), self.mesh)
 
     # ------------------------------------------------------------- sampling
     def sde_mask(self, it: int) -> Optional[jnp.ndarray]:
@@ -74,7 +106,12 @@ class BaseTrainer:
                ) -> Trajectory:
         """cond: (P, Lc, D) prompt embeddings -> grouped trajectories."""
         cond_g = group_repeat(cond, self.flow.group_size)
-        return self._sample_jit(params, cond_g, key, self.sde_mask(it))
+        distributed.check_batch_divisible(cond_g.shape[0], self.mesh,
+                                          self.dist.microbatch)
+        mask = self.sde_mask(it)
+        if mask is None:     # concrete mask: jit shardings need a real leaf
+            mask = jnp.ones((self.flow.num_steps,), bool)
+        return self._sample_jit(params, cond_g, key, mask)
 
     # -------------------------------------------------------------- rewards
     def _rewards(self, x0: jax.Array, cond_meta: Dict, *, group_size: int
@@ -86,13 +123,29 @@ class BaseTrainer:
 
     # --------------------------------------------------------------- update
     def loss_fn(self, params, traj: Trajectory, adv: jax.Array,
-                key: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+                key: jax.Array, *extras
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
         raise NotImplementedError
 
+    def update_extras(self) -> Tuple:
+        """Auxiliary pytrees threaded into the jitted update as *arguments*
+        (never closure-captured: jit would bake them in as constants at
+        trace time, silently freezing later updates — the NFT reference-
+        policy bug).  Called by ``step`` before the state is replaced, so
+        entries derived from ``self.state`` see the behavior policy."""
+        return ()
+
     def _update(self, state: RLState, traj: Trajectory, adv: jax.Array,
-                key: jax.Array) -> Tuple[RLState, Dict[str, jax.Array]]:
-        (loss, aux), grads = jax.value_and_grad(
-            self.loss_fn, has_aux=True)(state.params, traj, adv, key)
+                key: jax.Array, extras: Tuple = ()
+                ) -> Tuple[RLState, Dict[str, jax.Array]]:
+        k = self.dist.microbatch
+        if k and k > 1:
+            (loss, aux), grads = distributed.accumulated_value_and_grad(
+                self.loss_fn, state.params, traj, adv, key, extras, k)
+        else:
+            (loss, aux), grads = jax.value_and_grad(
+                self.loss_fn, has_aux=True)(state.params, traj, adv, key,
+                                            *extras)
         grads, gnorm = optim.clip_by_global_norm(grads,
                                                  self.opt_cfg.grad_clip)
         lr = self._lr(state.opt.step)
@@ -113,8 +166,14 @@ class BaseTrainer:
         traj = self.sample(self.state.params, cond, k_s, it)
         cond_meta = {"cond": traj.cond}
         rewards, adv = self._rewards_jit(traj.x0, cond_meta)
-        self.state, metrics = self._update_jit(self.state, traj, adv, k_u)
-        metrics["reward_mean"] = sum(r.mean() for r in rewards.values())
+        extras = self.update_extras()
+        self.state, metrics = self._update_jit(self.state, traj, adv, k_u,
+                                               extras)
+        # weighted, matching the advantage aggregation — EarlyStop and the
+        # JSON log track the same objective the optimizer ascends
+        weights = self.loader.weight_map()
+        metrics["reward_mean"] = sum(weights[name] * r.mean()
+                                     for name, r in rewards.items())
         for name, r in rewards.items():
             metrics[f"reward/{name}"] = r.mean()
         return metrics

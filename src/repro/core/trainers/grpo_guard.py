@@ -23,6 +23,9 @@ F32 = jnp.float32
 @registry.register("trainer", "grpo_guard")
 class GRPOGuardTrainer(FlowGRPOTrainer):
     rollout_sde = True
+    # RatioNorm is a batch-GLOBAL statistic: microbatched chunks would each
+    # recentre by their own chunk mean, silently weakening the correction
+    microbatch_safe = False
 
     def ratio_transform(self, ratio: jax.Array, t_index: jax.Array,
                         is_sde: jax.Array) -> jax.Array:

@@ -8,10 +8,21 @@ and negative policy on the forward flow-matching objective (paper Eq. 2):
 
 with v = ε − x₀ the forward-process velocity target and r ∈ [0,1] a
 normalized reward.  Implementation note (DESIGN.md §8): the implicit negative
-is realised by reflection about a frozen reference policy,
-v⁻ = 2·v_ref − v_θ, so pushing v⁺ toward the target for good samples and the
-*reflection* toward it for bad ones yields the contrastive improvement
-direction without likelihood estimation.
+is realised by reflection about a reference policy, v⁻ = 2·v_ref − v_θ, so
+pushing v⁺ toward the target for good samples and the *reflection* toward it
+for bad ones yields the contrastive improvement direction without likelihood
+estimation.
+
+The reference is the *behavior* policy — the params that sampled the current
+round — refreshed every iteration (online NFT).  A reference frozen at
+initialization anchors the loss's per-sample optimum
+``v* = r·v_target + (1−r)·(2·v_ref − v_target)`` to the init policy, so
+improvement stalls at a fixed point one covariance-step from init instead of
+compounding (the reward-doesn't-improve bug).  Mechanically the reference
+must be threaded through the jitted update as an *argument*
+(``update_extras``): reading ``self.ref_params`` inside a jitted function
+bakes the init values in as trace-time constants, silently freezing the
+reference no matter what the attribute is later set to.
 """
 from __future__ import annotations
 
@@ -30,14 +41,23 @@ F32 = jnp.float32
 @registry.register("trainer", "nft")
 class DiffusionNFTTrainer(BaseTrainer):
     rollout_sde = False           # ODE rollouts (Table 1 row "ODE")
+    donate_state_ok = False       # ref aliases state.params inside the update
 
     def __init__(self, *args, **kwargs):
         super().__init__(*args, **kwargs)
-        # frozen reference policy for the implicit negative
-        self.ref_params = jax.tree.map(lambda x: x, self.state.params)
+        # reference policy for the implicit negative; tracks the behavior
+        # policy (refreshed by update_extras each round)
+        self.ref_params = self.state.params
+
+    def update_extras(self):
+        self.ref_params = self.state.params    # behavior policy this round
+        return (self.ref_params,)
 
     def loss_fn(self, params, traj: Trajectory, adv: jax.Array,
-                key: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+                key: jax.Array, ref_params=None
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        if ref_params is None:        # direct (un-jitted) calls, e.g. tests
+            ref_params = self.ref_params
         x0 = traj.x0
         cond = traj.cond
         B = x0.shape[0]
@@ -49,7 +69,7 @@ class DiffusionNFTTrainer(BaseTrainer):
 
         v_pos = self.velocity(params, x_t, t, cond)
         v_ref = jax.lax.stop_gradient(
-            self.velocity(self.ref_params, x_t, t, cond))
+            self.velocity(ref_params, x_t, t, cond))
         v_neg = 2.0 * v_ref - v_pos
 
         # r in [0,1] from group-normalized advantages

@@ -1,0 +1,29 @@
+"""``repro.distributed`` — data-parallel training subsystem.
+
+The ROADMAP north-star's first scaling axis: a ``jax.sharding.Mesh`` with a
+single "data" dimension over prompts×groups, sharded jit entry points for
+the trainer's sample/rewards/update (``sharding``), sequential
+gradient-accumulation microbatching (``microbatch``), and a ``shard_map``
+per-device rollout for communication-free generation (``shard``).
+
+Everything degrades to the exact single-device path when
+``DistConfig.data_parallel`` resolves to one device: ``data_mesh`` returns
+``None`` and the jit wrappers reduce to plain ``jax.jit``.  Testable on CPU
+via ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+"""
+from repro.distributed.mesh import (DATA_AXIS, data_mesh,
+                                    resolve_data_parallel)
+from repro.distributed.microbatch import (accumulated_value_and_grad,
+                                          chunk_batch)
+from repro.distributed.shard import make_rollout_sharded, rollout_sharded
+from repro.distributed.sharding import (batch_sharding, check_batch_divisible,
+                                        jit_rewards, jit_sample, jit_update,
+                                        replicated, traj_shardings)
+
+__all__ = [
+    "DATA_AXIS", "data_mesh", "resolve_data_parallel",
+    "accumulated_value_and_grad", "chunk_batch", "make_rollout_sharded",
+    "rollout_sharded",
+    "batch_sharding", "check_batch_divisible", "jit_rewards", "jit_sample",
+    "jit_update", "replicated", "traj_shardings",
+]

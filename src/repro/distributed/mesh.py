@@ -1,0 +1,45 @@
+"""Device-mesh construction for data-parallel RL training.
+
+One axis — ``"data"`` — sharded over prompts×groups.  The mesh is only
+built when more than one device participates: ``data_mesh`` returns ``None``
+for ``data_parallel=1`` so every caller degrades to the exact single-device
+code path (plain ``jax.jit``, no resharding, no collectives).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.config import DistConfig
+
+DATA_AXIS = "data"
+
+
+def resolve_data_parallel(dist: DistConfig) -> int:
+    """0 -> all local devices; otherwise the configured count, validated."""
+    n_local = jax.local_device_count()
+    dp = dist.data_parallel
+    if dp < 0:
+        raise ValueError(f"dist.data_parallel must be >= 0, got {dp}")
+    if dp == 0:
+        return n_local
+    if dp > n_local:
+        raise ValueError(
+            f"dist.data_parallel={dp} but only {n_local} device(s) are "
+            f"visible — launch with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={dp} (CPU) or on a "
+            f"{dp}-device accelerator host")
+    return dp
+
+
+def data_mesh(dist: DistConfig) -> Optional[Mesh]:
+    """``Mesh((dp,), ("data",))`` over the first dp *local* devices (the
+    count was validated against local_device_count — in a multi-process run
+    jax.devices() would include other hosts' non-addressable devices), or
+    ``None`` when a single device participates (single-device fast path)."""
+    dp = resolve_data_parallel(dist)
+    if dp <= 1:
+        return None
+    return Mesh(jax.local_devices()[:dp], (DATA_AXIS,))

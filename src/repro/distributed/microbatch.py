@@ -1,0 +1,79 @@
+"""Gradient-accumulation microbatching.
+
+Batches of ``group_size × num_prompts`` trajectories that do not fit device
+memory are split on the batch axis into ``k`` sequential chunks; per-chunk
+gradients are accumulated in float32 and averaged, so the optimizer sees the
+same mean-over-batch gradient as a single full-batch pass (identical up to
+floating-point summation order — asserted tightly by
+``tests/test_distributed.py``).  Because every loss here is a mean over the
+batch and chunks are equal-sized, mean-over-chunks == mean-over-batch for
+the loss and gradients; non-linear *diagnostics* (e.g. ``adv_std``) become
+the mean of per-chunk values, which is documented, not fixed — metrics are
+monitoring, gradients are training.  Losses with batch-global statistics
+(GRPO-Guard's RatioNorm) are *rejected* at trainer construction
+(``BaseTrainer.microbatch_safe``) rather than silently made chunk-local.
+
+The chunk loop is a ``lax.scan``, so only one chunk's activations are live
+at a time — peak memory scales with ``B/k``, not ``B``.
+
+Each chunk's loss sees the shared ``key`` folded with its chunk index, so
+key-consuming losses (NFT/AWM timestep + noise draws) get independent draws
+per chunk rather than k copies of one realization.  For those losses
+microbatching is therefore *statistically* equivalent to full-batch (a
+different but equally valid Monte-Carlo sample), while key-ignoring losses
+(the GRPO family) keep the numeric gradient-equality above.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rollout import Trajectory
+
+F32 = jnp.float32
+
+
+def chunk_batch(x: jax.Array, axis: int, k: int) -> jax.Array:
+    """Split dim ``axis`` (size B) into k chunks: leading chunk axis first."""
+    s = x.shape
+    x = x.reshape(s[:axis] + (k, s[axis] // k) + s[axis + 1:])
+    return jnp.moveaxis(x, axis, 0)
+
+
+def _acc_init(shape_dtype):
+    dt = shape_dtype.dtype
+    acc_dt = F32 if jnp.issubdtype(dt, jnp.floating) else dt
+    return jnp.zeros(shape_dtype.shape, acc_dt)
+
+
+def accumulated_value_and_grad(loss_fn, params, traj: Trajectory,
+                               adv: jax.Array, key: jax.Array,
+                               extras: Tuple[Any, ...], k: int):
+    """((loss, aux), grads) of ``loss_fn`` averaged over ``k`` sequential
+    batch chunks.  Caller validates ``B % k == 0``."""
+    xs_c = chunk_batch(traj.xs, 1, k)
+    lp_c = chunk_batch(traj.logps, 1, k)
+    cond_c = chunk_batch(traj.cond, 0, k)
+    adv_c = chunk_batch(adv, 0, k)
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def one(idx, xs, lp, cond, adv_chunk):
+        t = Trajectory(xs=xs, logps=lp, ts=traj.ts,
+                       sde_mask=traj.sde_mask, cond=cond)
+        return vg(params, t, adv_chunk, jax.random.fold_in(key, idx),
+                  *extras)
+
+    shapes = jax.eval_shape(one, jnp.int32(0), xs_c[0], lp_c[0], cond_c[0],
+                            adv_c[0])
+    acc0 = jax.tree.map(_acc_init, shapes)
+
+    def body(acc, inp):
+        out = one(*inp)
+        return jax.tree.map(lambda a, o: a + o.astype(a.dtype), acc, out), None
+
+    acc, _ = jax.lax.scan(
+        body, acc0, (jnp.arange(k, dtype=jnp.int32), xs_c, lp_c, cond_c,
+                     adv_c))
+    return jax.tree.map(lambda a, s: (a / k).astype(s.dtype), acc, shapes)

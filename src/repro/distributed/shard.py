@@ -1,0 +1,65 @@
+"""``shard_map`` entry point: per-device independent rollouts.
+
+The jit-with-sharding path (``sharding.jit_sample``) keeps multi-device
+sampling numerically identical to single-device — the right tool for
+training.  For pure *generation throughput* (filling a reward buffer,
+serving bursts) cross-layout bit-equality is irrelevant; this entry point
+instead hands each data shard its own fold of the PRNG key and runs the
+rollout fully locally — zero cross-device communication, embarrassingly
+parallel.  Consequently the samples differ from (are statistically
+exchangeable with, not equal to) a single-device rollout of the same key.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.rollout import Trajectory, rollout
+from repro.distributed.mesh import DATA_AXIS
+
+
+def make_rollout_sharded(adapter, scheduler, num_steps: int, mesh: Mesh,
+                         sde_mask=None):
+    """Build the jitted per-shard rollout ONCE; returns
+    ``fn(params, cond, key) -> Trajectory``.  Reuse the returned callable
+    across calls (a generation loop) — rebuilding it per batch re-traces
+    the whole rollout every time."""
+
+    def local(params, cond_shard, key):
+        k = jax.random.fold_in(key, jax.lax.axis_index(DATA_AXIS))
+        return rollout(adapter, params, cond_shard, k, scheduler, num_steps,
+                       sde_mask)
+
+    out_specs = Trajectory(xs=P(None, DATA_AXIS), logps=P(None, DATA_AXIS),
+                           ts=P(), sde_mask=P(), cond=P(DATA_AXIS))
+    # check_rep=False: ts/sde_mask are replicated by construction (identical
+    # computation per shard) but shard_map cannot prove it
+    sharded = shard_map(local, mesh=mesh, in_specs=(P(), P(DATA_AXIS), P()),
+                        out_specs=out_specs, check_rep=False)
+    dp = mesh.shape[DATA_AXIS]
+
+    def run(params, cond: jax.Array, key: jax.Array) -> Trajectory:
+        if cond.shape[0] % dp != 0:
+            raise ValueError(
+                f"rollout batch {cond.shape[0]} is not divisible by the "
+                f"data axis ({dp} devices)")
+        return _jitted(params, cond, key)
+
+    _jitted = jax.jit(sharded)
+    return run
+
+
+def rollout_sharded(adapter, params, cond: jax.Array, key: jax.Array,
+                    scheduler, num_steps: int, mesh: Optional[Mesh],
+                    sde_mask=None) -> Trajectory:
+    """One-shot convenience over ``make_rollout_sharded`` (falls back to the
+    plain rollout when no mesh is given).  In a loop, build the callable
+    once with the factory instead — this wrapper re-traces per call."""
+    if mesh is None:
+        return rollout(adapter, params, cond, key, scheduler, num_steps,
+                       sde_mask)
+    return make_rollout_sharded(adapter, scheduler, num_steps, mesh,
+                                sde_mask)(params, cond, key)

@@ -1,0 +1,99 @@
+"""Sharded jit entry points for the trainer's sample / rewards / update.
+
+Layout: every batch-major array (trajectories, rewards, advantages,
+condition embeddings) is sharded over the mesh "data" axis on its batch
+dimension; parameters and optimizer state are replicated (pure data
+parallelism — FSDP layouts live in ``repro.sharding`` rule tables and can
+be layered on later).  All entry points are ``jax.jit`` with explicit
+``in_shardings``/``out_shardings``; XLA's SPMD partitioner inserts the
+(grad-all-reduce) collectives, which keeps the math bit-comparable with the
+single-device path up to floating-point reduction order.
+
+``Trajectory`` batch-axis positions: ``xs`` (T+1, B, ...) and ``logps``
+(T, B) carry batch on axis 1; ``cond`` on axis 0; ``ts``/``sde_mask`` are
+replicated schedule arrays.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.core.rollout import Trajectory
+from repro.distributed.mesh import DATA_AXIS
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def batch_sharding(mesh: Mesh, axis: int = 0) -> NamedSharding:
+    """Shard dimension ``axis`` over the data axis (batch-major layout)."""
+    return NamedSharding(mesh, PartitionSpec(*([None] * axis + [DATA_AXIS])))
+
+
+def traj_shardings(mesh: Mesh) -> Trajectory:
+    """Per-field shardings of a grouped Trajectory."""
+    return Trajectory(
+        xs=batch_sharding(mesh, 1),
+        logps=batch_sharding(mesh, 1),
+        ts=replicated(mesh),
+        sde_mask=replicated(mesh),
+        cond=batch_sharding(mesh, 0),
+    )
+
+
+def check_batch_divisible(batch: int, mesh: Optional[Mesh],
+                          microbatch: int = 0) -> None:
+    """Clear trace-time errors instead of opaque reshard/pad behavior."""
+    if microbatch and microbatch > 1 and batch % microbatch != 0:
+        raise ValueError(
+            f"batch size {batch} is not divisible by dist.microbatch="
+            f"{microbatch}; pick a microbatch count that divides "
+            f"num_prompts × group_size")
+    per_chunk = batch // microbatch if microbatch and microbatch > 1 else batch
+    if mesh is not None:
+        dp = mesh.shape[DATA_AXIS]
+        if per_chunk % dp != 0:
+            raise ValueError(
+                f"per-update batch {per_chunk} (batch {batch}"
+                + (f" / microbatch {microbatch}" if microbatch > 1 else "")
+                + f") is not divisible by dist.data_parallel={dp}; adjust "
+                "num_prompts/group_size so every device gets equal work")
+
+
+def jit_sample(fn: Callable, mesh: Optional[Mesh]):
+    """``fn(params, cond, key, sde_mask) -> Trajectory`` — params/key/mask
+    replicated, cond and the returned trajectory batch-sharded."""
+    if mesh is None:
+        return jax.jit(fn)
+    rep = replicated(mesh)
+    return jax.jit(
+        fn,
+        in_shardings=(rep, batch_sharding(mesh, 0), rep, rep),
+        out_shardings=traj_shardings(mesh))
+
+
+def jit_rewards(fn: Callable, mesh: Optional[Mesh]):
+    """``fn(x0, cond_meta) -> (rewards, adv)`` — everything batch-sharded."""
+    if mesh is None:
+        return jax.jit(fn)
+    b0 = batch_sharding(mesh, 0)
+    return jax.jit(fn, in_shardings=(b0, b0))
+
+
+def jit_update(fn: Callable, mesh: Optional[Mesh], *, donate: bool = True):
+    """``fn(state, traj, adv, key, extras) -> (state, metrics)`` — RLState
+    replicated and donated (params + AdamW moments rewritten in place),
+    trajectory/advantages batch-sharded; XLA all-reduces the grads."""
+    donate_argnums = (0,) if donate else ()
+    if mesh is None:
+        return jax.jit(fn, donate_argnums=donate_argnums)
+    rep = replicated(mesh)
+    return jax.jit(
+        fn,
+        in_shardings=(rep, traj_shardings(mesh), batch_sharding(mesh, 0),
+                      rep, rep),
+        out_shardings=(rep, rep),
+        donate_argnums=donate_argnums)

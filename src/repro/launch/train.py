@@ -13,20 +13,34 @@ the registry, so they can never drift from what is registered.
   PYTHONPATH=src python -m repro.launch.train --config run.json \\
       --set flow.eta=0.5 --set optim.lr=3e-4 --set loop.log_file=log.json
 
+Data-parallel training shards prompts×groups over devices, with optional
+gradient-accumulation microbatching (``repro.distributed``); on CPU, host
+devices are faked via XLA_FLAGS:
+
+  PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+      python -m repro.launch.train --reduced --steps 2 \\
+      --set dist.data_parallel=4 --set dist.microbatch=2
+
 The equivalent programmatic path is ``Experiment.from_file("run.json")``
 (see ROADMAP.md "Running experiments").
 """
 from __future__ import annotations
 
+import jax
+
 from repro.api import Experiment
+from repro.distributed import resolve_data_parallel
 
 
 def main(argv=None) -> None:
     exp = Experiment.from_cli(argv)
     d = exp.describe()
+    dp = resolve_data_parallel(exp.cfg.dist)
     print(f"[train] {d['trainer']['name']} on {d['arch']['name']} "
           f"({d['arch']['n_params']/1e6:.1f}M params), "
           f"sde={d['scheduler']['name']}, rewards={d['rewards']}")
+    print(f"[train] devices={jax.local_device_count()} data_parallel={dp} "
+          f"microbatch={exp.cfg.dist.microbatch or 1}")
     result = exp.train()
     hist = result["history"]
     if hist:

@@ -196,6 +196,59 @@ def test_serve_uses_trained_params(tmp_path):
     assert served[0] is trained[0]
 
 
+# ------------------------------------------------------------- JSON log sink
+
+class _Boom(Exception):
+    pass
+
+
+class _CrashAt:
+    """Callback that simulates a preemption after ``step`` completes."""
+
+    def __init__(self, step):
+        self.step = step
+
+    def on_train_start(self, loop):
+        pass
+
+    def on_step(self, loop, step, metrics):
+        if step == self.step:
+            raise _Boom
+
+    def on_train_end(self, loop, history):
+        pass
+
+
+def test_json_log_survives_crash(tmp_path):
+    """Incremental flush: a run killed mid-training keeps every step it
+    logged (previously the log was only written at on_train_end, so a crash
+    lost the whole history even though checkpoints were saved)."""
+    log = tmp_path / "log.json"
+    cfg = tiny_cfg(tmp_path, steps=4, save_every=2, log_file=str(log))
+    with pytest.raises(_Boom):
+        Experiment.from_config(cfg).train(callbacks=[_CrashAt(1)])
+    rows = json.loads(log.read_text())
+    assert [r["step"] for r in rows] == [0, 1]
+    assert all(np.isfinite(r["reward"]) for r in rows)
+
+
+def test_json_log_resume_merge(tmp_path):
+    """Resume-aware merge: after crash + resume the log covers every step
+    exactly once; a resume with nothing to do leaves the log untouched."""
+    log = tmp_path / "log.json"
+    cfg4 = tiny_cfg(tmp_path, steps=4, save_every=2, log_file=str(log))
+    with pytest.raises(_Boom):
+        Experiment.from_config(cfg4).train(callbacks=[_CrashAt(2)])
+    assert [r["step"] for r in json.loads(log.read_text())] == [0, 1, 2]
+    result = Experiment.from_config(cfg4).train()      # resumes at step 2
+    assert result["start_step"] == 2
+    assert [r["step"] for r in json.loads(log.read_text())] == [0, 1, 2, 3]
+    # nothing left to do: log stays as-is
+    before = log.read_text()
+    Experiment.from_config(cfg4).train()
+    assert log.read_text() == before
+
+
 # -------------------------------------------------------- checkpoint/resume
 
 def _state_leaves(state):

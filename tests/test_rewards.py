@@ -53,6 +53,24 @@ def test_group_normalize_properties():
     np.testing.assert_allclose(zg.std(1), 1.0, atol=1e-2)
 
 
+def test_group_normalize_indivisible_batch_raises():
+    """B % group_size != 0 must fail with a clear error naming both numbers,
+    not an opaque reshape crash."""
+    r = jax.random.normal(KEY, (10,))
+    with pytest.raises(ValueError, match=r"10.*group_size 4"):
+        group_normalize(r, 4)
+    with pytest.raises(ValueError, match="group_size"):
+        group_normalize(r, 0)
+
+
+def test_group_repeat_invalid_group_size_raises():
+    from repro.core.rollout import group_repeat
+    cond = jax.random.normal(KEY, (2, 4, 8))
+    with pytest.raises(ValueError, match="group_size"):
+        group_repeat(cond, 0)
+    assert group_repeat(cond, 3).shape == (6, 4, 8)
+
+
 def test_weighted_sum_vs_gdpo():
     """GDPO decouples scales: a reward with 100× variance dominates
     weighted_sum but not gdpo."""
