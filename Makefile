@@ -3,20 +3,24 @@
 #
 #   make verify      - what CI runs; catches the dacite-class regression
 #                      (a third-party import sneaking into the core path),
-#                      then re-exercises the Pallas interpret dispatch layer
-#                      and the 4-host-device data-parallel configuration
+#                      then re-exercises the Pallas interpret dispatch layer,
+#                      the 4-host-device data-parallel configuration, and the
+#                      serving engine (incl. 4-fake-device sharded serving)
 #   make smoke       - 2-step end-to-end training run through the Experiment
 #                      front door (launch CLI + config-file path)
 #   make smoke-dist  - same, sharded over 4 faked CPU devices with
 #                      gradient-accumulation microbatching
+#   make test-serve  - serving engine suite on 4 faked devices + the
+#                      sharded serve CLI end-to-end
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 DIST_FLAGS := --xla_force_host_platform_device_count=4
 
-.PHONY: verify deps-check test test-interpret test-dist smoke smoke-dist
+.PHONY: verify deps-check test test-interpret test-dist test-serve smoke \
+	smoke-dist
 
-verify: deps-check test test-interpret test-dist
+verify: deps-check test test-interpret test-dist test-serve
 
 # Core modules must import on a bare jax+numpy interpreter: no dacite, and
 # zstandard/msgpack/hypothesis only ever loaded behind soft gates.
@@ -42,6 +46,18 @@ test-dist:
 	    tests/test_distributed.py \
 	    -k "not sharded_training and not shard_map"
 	$(MAKE) smoke-dist
+
+# Serving engine: the suite re-run ON 4 faked host devices (the sharded
+# subprocess test is deselected — it spawns its own 4-device child and
+# already ran in `make test`), then the bucketed + sharded serve CLI
+# end-to-end (dist.data_parallel=4, per-request bit-identical to dp=1).
+test-serve:
+	XLA_FLAGS="$(DIST_FLAGS)" $(PY) -m pytest -x -q tests/test_serving.py \
+	    -k "not subprocess"
+	XLA_FLAGS="$(DIST_FLAGS)" $(PY) -m repro.launch.serve --reduced \
+	    --requests 9 --max-batch 4 --deadline-ms 2 \
+	    --set flow.num_steps=2 --set dist.data_parallel=4 \
+	    --set 'data.encoder={"cond_dim": 512, "cond_len": 8, "vocab": 512, "hidden": 64}'
 
 smoke:
 	$(PY) -m repro.launch.train --reduced --steps 2 \

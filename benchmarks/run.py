@@ -8,7 +8,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import preprocessing, reward_curves, roofline, \
-        scaling, sde_dynamics
+        scaling, sde_dynamics, serving
 
     suites = [
         ("sde_dynamics (paper Table 1)", sde_dynamics.run),
@@ -16,6 +16,7 @@ def main() -> None:
         ("preprocessing (paper Table 2)", preprocessing.run),
         ("roofline (deliverable g)", roofline.run),
         ("scaling (repro.distributed data-parallel)", scaling.run),
+        ("serving (repro.serving bucketed engine)", serving.run),
     ]
     print("name,us_per_call,derived")
     failures = 0

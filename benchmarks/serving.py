@@ -1,0 +1,117 @@
+"""Benchmark: serving throughput/latency — bucketed engine vs the
+historical static serve loop.
+
+The pre-engine ``FlowSampler.serve`` padded *every* chunk to one static
+``max_batch`` shape (a remainder of 3 requests cost a full 8-wide rollout).
+The engine admits requests into a bucket-tier grid, so remainders run in
+the smallest covering bucket, warmup pre-traces the grid, and repeat
+prompts skip the encoder.  Rows:
+
+* ``serve_static_loop``  — the old loop (pad-to-max_batch), post-compile
+* ``serve_engine``       — engine steady state (post-warmup), same N and
+                           max_batch; derived reports speedup vs static
+                           (acceptance: >= 1.0) and padding waste
+* ``serve_engine_p50``   — single-request latency through the b=1 bucket
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.config import FlowRLConfig
+from repro.core.rollout import rollout
+from repro.models import params as params_lib
+from repro.models.flow import FlowAdapter
+from repro.core import schedulers
+from repro.serving import ServingEngine
+
+N_REQUESTS = 20          # deliberately not a multiple of MAX_BATCH: the
+MAX_BATCH = 8            # remainder (20 = 2x8 + 4) is where static padding
+NUM_STEPS = 6            # wastes a half-empty full-width rollout
+REPS = 3                 # best-of (min): shared-CPU wall noise dwarfs the
+                         # effect being measured, so means mislead
+
+
+def _static_loop_serve(fn, params, cond, key, max_batch):
+    """The pre-engine FlowSampler.serve: one static (max_batch, ...) shape,
+    every chunk padded up to it.  ``fn`` is the jitted rollout, built ONCE
+    by the caller so the timed reps hit a warm trace cache."""
+    outs = []
+    N = cond.shape[0]
+    for i in range(0, N, max_batch):
+        chunk = cond[i:i + max_batch]
+        pad = max_batch - chunk.shape[0]
+        if pad:
+            chunk = jnp.pad(chunk, ((0, pad), (0, 0), (0, 0)))
+        traj = fn(params, chunk, jax.random.fold_in(key, i))
+        outs.append(traj.x0[:chunk.shape[0] - pad if pad else None])
+    return jnp.concatenate(outs, axis=0)[:N]
+
+
+def run() -> List[Dict]:
+    key = jax.random.PRNGKey(0)
+    arch = configs.get_reduced("flux_dit")
+    flow = FlowRLConfig(num_steps=NUM_STEPS, latent_tokens=16, latent_dim=8)
+    adapter = FlowAdapter(arch, flow)
+    params = params_lib.init(adapter.spec(), key)
+    scheduler = schedulers.build("ode", 0.0)
+    cond = jax.random.normal(key, (N_REQUESTS, 4, 512), jnp.float32)
+
+    # ---- warm both paths ------------------------------------------------
+    fn = jax.jit(lambda p, c, k: rollout(adapter, p, c, k, scheduler,
+                                         NUM_STEPS))
+    jax.block_until_ready(_static_loop_serve(fn, params, cond, key,
+                                             MAX_BATCH))
+    engine = ServingEngine(adapter, scheduler, params, num_steps=NUM_STEPS,
+                           max_batch=MAX_BATCH, cond_len=cond.shape[1])
+    warm = engine.warmup()
+    jax.block_until_ready(engine.serve(cond, key))
+
+    # ---- interleaved best-of-REPS timing --------------------------------
+    static_ts, engine_ts = [], []
+    for r in range(REPS):
+        t0 = time.perf_counter()
+        lat = _static_loop_serve(fn, params, cond, key, MAX_BATCH)
+        jax.block_until_ready(lat)
+        static_ts.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        lat = engine.serve(cond, jax.random.fold_in(key, r))
+        jax.block_until_ready(lat)
+        engine_ts.append(time.perf_counter() - t0)
+    static_s, engine_s = min(static_ts), min(engine_ts)
+    stats = engine.stats
+    assert stats["cold_dispatches"] == 0, "engine compiled during timing"
+
+    # ---- single-request latency through the b=1 bucket ------------------
+    h = engine.submit(cond=cond[0], seed=123)
+    engine.drain()
+    jax.block_until_ready(h.result())                         # b=1 warm
+    t0 = time.perf_counter()
+    for r in range(REPS):
+        h = engine.submit(cond=cond[0], seed=200 + r)
+        engine.drain()
+        jax.block_until_ready(h.result())
+    p50_s = (time.perf_counter() - t0) / REPS
+
+    return [
+        {"name": "serve_static_loop",
+         "us_per_call": round(static_s * 1e6, 1),
+         "derived": {"req_per_s": round(N_REQUESTS / static_s, 2),
+                     "padded_lanes":
+                         (-N_REQUESTS) % MAX_BATCH if N_REQUESTS % MAX_BATCH
+                         else 0}},
+        {"name": "serve_engine",
+         "us_per_call": round(engine_s * 1e6, 1),
+         "derived": {"req_per_s": round(N_REQUESTS / engine_s, 2),
+                     "speedup_vs_static": round(static_s / engine_s, 3),
+                     "padded_lanes": stats["padded_lanes"],
+                     "buckets": list(stats["buckets"]),
+                     "warmup_s": round(sum(warm.values()), 2)}},
+        {"name": "serve_engine_p50",
+         "us_per_call": round(p50_s * 1e6, 1),
+         "derived": {"bucket": 1}},
+    ]

@@ -19,6 +19,7 @@ CORE_MODULES = [
     "repro.data.prompts",
     "repro.distributed",
     "repro.optim",
+    "repro.serving",
 ]
 
 # third-party packages that must never be a hard requirement of the core

@@ -15,7 +15,9 @@ from repro.api.loop import (Callback, EarlyStop, JSONLogSink, MetricLogger,
                             PeriodicCheckpoint, TrainLoop)
 from repro.api.overrides import apply_overrides, parse_assignments
 from repro.api.serving import FlowSampler
+from repro.serving import ServingEngine
 
 __all__ = ["Experiment", "default_cli_config", "TrainLoop", "Callback",
            "MetricLogger", "JSONLogSink", "PeriodicCheckpoint", "EarlyStop",
-           "apply_overrides", "parse_assignments", "FlowSampler"]
+           "apply_overrides", "parse_assignments", "FlowSampler",
+           "ServingEngine"]

@@ -138,6 +138,10 @@ class Experiment:
         return int(self.cfg.data.encoder.get("cond_dim", 512))
 
     @property
+    def cond_len(self) -> int:
+        return int(self.cfg.data.encoder.get("cond_len", 16))
+
+    @property
     def flow(self) -> FlowRLConfig:
         """FlowRLConfig with reward args auto-completed: any reward
         parameter named latent_dim / latent_tokens / cond_dim that the spec
@@ -195,15 +199,25 @@ class Experiment:
         return self._trainer
 
     def build_sampler(self, key: Optional[jax.Array] = None,
-                      max_batch: int = 8, params=None) -> FlowSampler:
+                      max_batch: int = 8, params=None,
+                      buckets: Optional[Sequence[int]] = None,
+                      deadline_s: float = 0.005,
+                      provider=None) -> FlowSampler:
         """``params`` priority: explicit argument > this Experiment's
-        trained state (if ``train()`` ran) > fresh init."""
+        trained state (if ``train()`` ran) > fresh init.  The sampler's
+        engine shards inference over ``cfg.dist`` (``data_parallel>1``
+        builds the "data" mesh; per-request output is bit-identical to
+        single-device)."""
+        from repro import distributed
         key = jax.random.PRNGKey(self.cfg.seed) if key is None else key
         if params is None and self._trainer is not None:
             params = self._trainer.state.params
         return FlowSampler(self.arch, self.flow, key=key,
                            max_batch=max_batch, cond_dim=self.cond_dim,
-                           params=params)
+                           params=params, buckets=buckets,
+                           deadline_s=deadline_s,
+                           mesh=distributed.data_mesh(self.cfg.dist),
+                           provider=provider, cond_len=self.cond_len)
 
     def describe(self) -> Dict[str, Any]:
         """Resolved-component summary (uses ``registry.describe``)."""
@@ -338,13 +352,28 @@ class Experiment:
                 "start_step": start_step, "final_step": final}
 
     # ---------------------------------------------------------------- serve
+    def build_engine(self, key: Optional[jax.Array] = None,
+                     max_batch: int = 8, params=None,
+                     buckets: Optional[Sequence[int]] = None,
+                     deadline_s: float = 0.005):
+        """The serving engine directly (``repro.serving.ServingEngine``):
+        submit/poll/drain request-queue API, warmup, stats.  Prompts are
+        encoded live through the engine's LRU cond cache — repeat prompts
+        skip the ConditionProvider."""
+        sampler = self.build_sampler(key, max_batch=max_batch, params=params,
+                                     buckets=buckets, deadline_s=deadline_s,
+                                     provider=self.build_provider(live=True))
+        return sampler.engine
+
     def serve(self, prompts: Sequence[str], max_batch: int = 8,
-              key: Optional[jax.Array] = None, params=None) -> jax.Array:
-        """Batched sampling for a list of prompt requests -> latents."""
+              key: Optional[jax.Array] = None, params=None,
+              buckets: Optional[Sequence[int]] = None,
+              deadline_s: float = 0.005) -> jax.Array:
+        """Batched sampling for a list of prompt requests -> latents
+        (bucketed engine; ``cfg.dist.data_parallel`` shards inference)."""
         key = jax.random.PRNGKey(self.cfg.seed) if key is None else key
         # serving encodes live by default: requests are open-vocabulary, so
         # the preprocessing cache can't be assumed to cover them
-        provider = self.build_provider(live=True)
-        cond = provider.get(prompts)["cond"]
-        sampler = self.build_sampler(key, max_batch=max_batch, params=params)
-        return sampler.serve(cond, key)
+        engine = self.build_engine(key, max_batch=max_batch, params=params,
+                                   buckets=buckets, deadline_s=deadline_s)
+        return engine.serve(list(prompts), key)

@@ -1,46 +1,51 @@
-"""Serving side of the Experiment front door: batched flow-matching
-sampling over any registered backbone × scheduler combination.
+"""Serving side of the Experiment front door.
 
-``FlowSampler`` (moved here from ``launch/serve.py``) micro-batches prompt
-requests through a jit'd rollout; ``launch/serve.py`` and the serving
-example are thin wrappers over :meth:`repro.api.Experiment.build_sampler`.
+``FlowSampler`` is now a thin client of :class:`repro.serving.ServingEngine`
+(the bucketed continuous-batching engine): it owns params + adapter +
+scheduler resolution and delegates every batch to the engine, so the
+historical ``serve(cond, key)`` call sites keep working while gaining
+bucketed batching, compile-cache warmup, and (with a mesh) sharded
+inference.  Per-request keys are ``fold_in(key, i)`` — request i's latent
+is identical whatever ``max_batch``, bucket layout, or device count is in
+effect.
 """
 from __future__ import annotations
 
+from typing import Optional, Sequence
+
 import jax
-import jax.numpy as jnp
 
 from repro.core import schedulers
-from repro.core.rollout import rollout
 from repro.models import params as params_lib
 from repro.models.flow import FlowAdapter
+from repro.serving import ServingEngine
 
 
 class FlowSampler:
-    """Batched sampling server over a FlowAdapter."""
+    """Batched sampling server over a FlowAdapter (engine-backed)."""
 
     def __init__(self, arch_cfg, flow_cfg, *, key, max_batch: int = 8,
-                 cond_dim: int = 512, params=None):
+                 cond_dim: int = 512, params=None,
+                 buckets: Optional[Sequence[int]] = None,
+                 deadline_s: float = 0.005, mesh=None, provider=None,
+                 cond_len: int = 16):
         self.adapter = FlowAdapter(arch_cfg, flow_cfg, cond_dim)
         self.scheduler = schedulers.build(flow_cfg.sde_type, flow_cfg.eta)
         self.flow_cfg = flow_cfg
         self.params = (params if params is not None
                        else params_lib.init(self.adapter.spec(), key))
         self.max_batch = max_batch
-        self._rollout = jax.jit(
-            lambda p, cond, k: rollout(self.adapter, p, cond, k,
-                                       self.scheduler, flow_cfg.num_steps))
+        self.engine = ServingEngine(
+            self.adapter, self.scheduler, self.params,
+            num_steps=flow_cfg.num_steps, max_batch=max_batch,
+            buckets=buckets, deadline_s=deadline_s, mesh=mesh,
+            provider=provider, cond_len=cond_len)
+
+    def warmup(self) -> dict:
+        """Pre-trace the engine's bucket grid; returns per-shape seconds."""
+        return self.engine.warmup()
 
     def serve(self, cond: jax.Array, key: jax.Array) -> jax.Array:
-        """cond: (N, Lc, D) -> latents (N, Lt, ld); micro-batched."""
-        outs = []
-        N = cond.shape[0]
-        for i in range(0, N, self.max_batch):
-            chunk = cond[i:i + self.max_batch]
-            pad = self.max_batch - chunk.shape[0]
-            if pad:
-                chunk = jnp.pad(chunk, ((0, pad), (0, 0), (0, 0)))
-            traj = self._rollout(self.params, chunk,
-                                 jax.random.fold_in(key, i))
-            outs.append(traj.x0[:chunk.shape[0] - pad if pad else None])
-        return jnp.concatenate(outs, axis=0)[:N]
+        """cond: (N, Lc, D) -> latents (N, Lt, ld), bucket-batched through
+        the engine."""
+        return self.engine.serve(cond, key)

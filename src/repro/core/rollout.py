@@ -60,6 +60,68 @@ def rollout(adapter: FlowAdapter, params, cond: jax.Array, key: jax.Array,
     return Trajectory(xs=xs, logps=logps, ts=ts, sde_mask=sde_mask, cond=cond)
 
 
+def request_keys(key: jax.Array, batch: int) -> jax.Array:
+    """(batch, 2) per-request PRNG keys: row i = fold_in(key, i).  The unit
+    of determinism for keyed rollouts — request i's latent depends on row i
+    alone, never on who else shares the batch."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(batch))
+
+
+def rollout_keyed(adapter: FlowAdapter, params, cond: jax.Array,
+                  keys: jax.Array, scheduler: SDESchedulerMixin,
+                  num_steps: int,
+                  sde_mask: Optional[jax.Array] = None) -> Trajectory:
+    """Per-request-keyed rollout: ``keys`` is (B, 2) — one PRNG key per
+    sample, driving both its init latent and its per-step noise.
+
+    Unlike :func:`rollout` (one batch key: noise depends on batch
+    composition), each sample's trajectory here is a pure function of its
+    own (cond row, key row) — bit-identical whether it runs alone, padded,
+    in any bucket size, or sharded over devices.  This is the invariant the
+    serving engine's bucketed batching and sharded inference rest on."""
+    B = cond.shape[0]
+    if keys.shape[0] != B:
+        raise ValueError(
+            f"rollout_keyed: {B} cond rows but {keys.shape[0]} keys — "
+            "every request needs exactly one PRNG key")
+    ts = scheduler.timesteps(num_steps)
+    if sde_mask is None:
+        sde_mask = jnp.ones((num_steps,), bool)
+
+    shape = (adapter.flow_cfg.latent_tokens, adapter.flow_cfg.latent_dim)
+    k2 = jax.vmap(jax.random.split)(keys)
+    k_init, k_step = k2[:, 0], k2[:, 1]
+    # per-key init through the adapter's hook (custom priors apply to the
+    # serving path too); bit-equal to a direct (Lt, ld) draw for the
+    # default Gaussian since the element count per key is identical
+    x_init = jax.vmap(lambda k: adapter.init_latent(k, 1)[0])(k_init)
+
+    def body(x, inp):
+        t, t_next, is_sde, i = inp
+        tb = jnp.full((B,), t, F32)
+        v = adapter.velocity(params, x, tb, cond).astype(F32)
+        xf = x.astype(F32)
+        eps = jax.vmap(lambda k: jax.random.normal(
+            jax.random.fold_in(k, i), shape, F32))(k_step)
+        # step_with_eps so fused kernels (flow_sde's Pallas sde_step)
+        # dispatch here exactly as they do in `rollout`; masked
+        # (is_sde=False) steps integrate the plain flow (step_ode), NOT
+        # the SDE drift mean — for eta>0 schedulers the drift carries a
+        # nonzero sigma^2 correction even with the noise masked off
+        # (the MixGRPO ODE window)
+        x_sde, logp_sde = scheduler.step_with_eps(v, xf, t, t_next, eps)
+        x_ode = scheduler.step_ode(v, xf, t, t_next)
+        x_next = jnp.where(is_sde, x_sde, x_ode)
+        logp = jnp.where(is_sde, logp_sde, jnp.zeros((B,), F32))
+        return x_next, (x_next, logp)
+
+    _, (xs_tail, logps) = jax.lax.scan(
+        body, x_init, (ts[:-1], ts[1:], sde_mask,
+                       jnp.arange(num_steps)))
+    xs = jnp.concatenate([x_init[None], xs_tail], axis=0)
+    return Trajectory(xs=xs, logps=logps, ts=ts, sde_mask=sde_mask, cond=cond)
+
+
 def group_repeat(cond: jax.Array, group_size: int) -> jax.Array:
     """(P, Lc, D) prompts -> (P·G, Lc, D) with each prompt repeated G times
     (consecutive — group g of prompt p occupies rows p·G..p·G+G−1)."""

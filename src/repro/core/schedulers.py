@@ -69,21 +69,30 @@ class SDESchedulerMixin:
         return self.sigma(t, t_next) * jnp.sqrt(delta)
 
     # -- unified API ---------------------------------------------------------
-    def step(self, v: jax.Array, x: jax.Array, t: jax.Array,
-             t_next: jax.Array, key: jax.Array
-             ) -> Tuple[jax.Array, jax.Array]:
-        """One sampling step. Returns (x_next, logp (batch,))."""
+    def step_with_eps(self, v: jax.Array, x: jax.Array, t: jax.Array,
+                      t_next: jax.Array, eps: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+        """One sampling step from externally supplied noise ``eps`` (the
+        keyed rollout draws per-request noise; ``step`` draws from a batch
+        key).  Returns (x_next, logp (batch,)).  Subclasses with a fused
+        kernel override THIS hook, so both rollout flavors dispatch to it."""
         xf, vf = x.astype(F32), v.astype(F32)
         mean = self.mean_next(vf, xf, t, t_next)
         std = self.noise_std(t, t_next)
-        eps = jax.random.normal(key, x.shape, F32)
         stochastic = std > 0
-        x_next = jnp.where(stochastic, mean + std * eps, mean)
+        x_next = jnp.where(stochastic, mean + std * eps.astype(F32), mean)
         safe_std = jnp.maximum(std, 1e-20)
         logp = jnp.where(stochastic,
                          gaussian_logpdf(x_next, mean, safe_std),
                          jnp.zeros(x.shape[0], F32))
         return x_next, logp
+
+    def step(self, v: jax.Array, x: jax.Array, t: jax.Array,
+             t_next: jax.Array, key: jax.Array
+             ) -> Tuple[jax.Array, jax.Array]:
+        """One sampling step. Returns (x_next, logp (batch,))."""
+        eps = jax.random.normal(key, x.shape, F32)
+        return self.step_with_eps(v, x, t, t_next, eps)
 
     def logprob(self, v: jax.Array, x: jax.Array, t: jax.Array,
                 t_next: jax.Array, x_next: jax.Array) -> jax.Array:
@@ -110,9 +119,10 @@ class FlowSDEScheduler(SDESchedulerMixin):
     timestep grid away from 1, which we reproduce by clamping the σ argument
     (documented deviation, DESIGN.md §8).
 
-    ``step`` dispatches to the fused Pallas ``sde_step`` kernel on TPU
-    (drift + noise + log-density in one VMEM pass); the jnp path is
-    bit-compatible (tests/test_kernels.py)."""
+    ``step_with_eps`` dispatches to the fused Pallas ``sde_step`` kernel on
+    TPU (drift + noise + log-density in one VMEM pass) for BOTH the batch-
+    keyed ``step`` and the per-request-keyed serving rollout; the jnp path
+    is bit-compatible (tests/test_kernels.py)."""
     eta: float = 0.7
     t_sigma_max: float = 0.96
 
@@ -120,12 +130,11 @@ class FlowSDEScheduler(SDESchedulerMixin):
         tc = jnp.clip(t, _EPS, self.t_sigma_max)
         return self.eta * jnp.sqrt(tc / (1.0 - tc))
 
-    def step(self, v, x, t, t_next, key):
+    def step_with_eps(self, v, x, t, t_next, eps):
         from repro.kernels import ops
         if ops.pallas_enabled():
-            eps = jax.random.normal(key, x.shape, F32)
             return ops.sde_step(v, x, eps, t, t_next, eta=self.eta)
-        return super().step(v, x, t, t_next, key)
+        return super().step_with_eps(v, x, t, t_next, eps)
 
 
 @registry.register("scheduler", "dance_sde")

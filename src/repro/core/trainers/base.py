@@ -86,6 +86,7 @@ class BaseTrainer:
         specs = flow_cfg.rewards or DEFAULT_REWARDS
         self.loader = MultiRewardLoader(specs, k_r)
         self._lr = optim.make_schedule(opt_cfg)
+        self._engine = None
         self._sample_jit = distributed.jit_sample(self._sample, self.mesh)
         self._update_jit = distributed.jit_update(
             self._update, self.mesh,
@@ -94,6 +95,34 @@ class BaseTrainer:
             self._rewards, group_size=flow_cfg.group_size), self.mesh)
 
     # ------------------------------------------------------------- sampling
+    def attach_engine(self, engine) -> None:
+        """Opt online rollouts into a :class:`repro.serving.ServingEngine`
+        (usually ``ServingEngine.for_trainer(self)``): sampling then runs
+        the per-request-keyed, bucket-padded, compile-cached path the
+        serving stack uses — per-sample results independent of batch
+        composition and device layout, and one compile cache shared between
+        training rollouts and user-facing serving.  The engine must use
+        this trainer's adapter/scheduler/num_steps (and mesh, if any);
+        pass ``None`` to detach.  A mismatched scheduler would make the
+        update's recomputed log-probs a *different* transition density
+        than the one sampled under — silently wrong ratios — so the
+        components are validated here, not trusted."""
+        if engine is not None:
+            if engine.num_steps != self.flow.num_steps:
+                raise ValueError(
+                    f"engine.num_steps={engine.num_steps} != trainer "
+                    f"num_steps={self.flow.num_steps}")
+            if engine.scheduler != self.scheduler:
+                raise ValueError(
+                    f"engine scheduler {engine.scheduler!r} != trainer "
+                    f"scheduler {self.scheduler!r} — rollout dynamics and "
+                    "the update's logprob must match")
+            if engine.mesh != self.mesh:
+                raise ValueError(
+                    f"engine mesh {engine.mesh} != trainer mesh "
+                    f"{self.mesh} — build via ServingEngine.for_trainer")
+        self._engine = engine
+
     def sde_mask(self, it: int) -> Optional[jnp.ndarray]:
         return None  # default: all steps stochastic (or all ODE)
 
@@ -106,11 +135,15 @@ class BaseTrainer:
                ) -> Trajectory:
         """cond: (P, Lc, D) prompt embeddings -> grouped trajectories."""
         cond_g = group_repeat(cond, self.flow.group_size)
+        # the downstream *update* still shards/chunks the trajectory, so the
+        # divisibility contract holds on both sampling paths
         distributed.check_batch_divisible(cond_g.shape[0], self.mesh,
                                           self.dist.microbatch)
         mask = self.sde_mask(it)
         if mask is None:     # concrete mask: jit shardings need a real leaf
             mask = jnp.ones((self.flow.num_steps,), bool)
+        if self._engine is not None:
+            return self._engine.rollout(params, cond_g, key, sde_mask=mask)
         return self._sample_jit(params, cond_g, key, mask)
 
     # -------------------------------------------------------------- rewards

@@ -17,7 +17,7 @@ import jax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.rollout import Trajectory, rollout
+from repro.core.rollout import Trajectory, rollout, rollout_keyed
 from repro.distributed.mesh import DATA_AXIS
 
 
@@ -47,6 +47,54 @@ def make_rollout_sharded(adapter, scheduler, num_steps: int, mesh: Mesh,
                 f"rollout batch {cond.shape[0]} is not divisible by the "
                 f"data axis ({dp} devices)")
         return _jitted(params, cond, key)
+
+    _jitted = jax.jit(sharded)
+    return run
+
+
+def make_rollout_keyed_sharded(adapter, scheduler, num_steps: int,
+                               mesh: Optional[Mesh], x0_only: bool = False):
+    """Sharded entry point for the *per-request-keyed* rollout (the serving
+    engine's executor): cond AND the (B, 2) per-request key batch are both
+    sharded over the data axis, so each device runs exactly the computation
+    the single-device path runs for its slice of requests — no axis-index
+    key folding, hence **bit-identical per request** to ``mesh=None``
+    (tests/test_serving.py asserts exact equality on 4 faked host devices).
+
+    Returns ``fn(params, cond, keys, sde_mask) -> Trajectory`` (jitted;
+    build once per (batch, num_steps) shape and reuse — the engine's
+    compile cache does exactly that).  Batch must divide the mesh's data
+    axis; the engine's bucket grid is dp-aligned to guarantee it.
+
+    ``x0_only=True`` returns just the final latents (B, Lt, ld) — the
+    serving queue's executor: XLA then dead-code-eliminates the stacked
+    per-step trajectory/log-prob buffers the scan would otherwise
+    materialize (x0 values are bit-identical either way)."""
+
+    def local(params, cond_shard, keys_shard, sde_mask):
+        traj = rollout_keyed(adapter, params, cond_shard, keys_shard,
+                             scheduler, num_steps, sde_mask)
+        return traj.x0 if x0_only else traj
+
+    if mesh is None:
+        return jax.jit(local)
+    out_specs = (P(DATA_AXIS) if x0_only else
+                 Trajectory(xs=P(None, DATA_AXIS), logps=P(None, DATA_AXIS),
+                            ts=P(), sde_mask=P(), cond=P(DATA_AXIS)))
+    # check_rep=False: ts/sde_mask are replicated by construction (identical
+    # computation per shard) but shard_map cannot prove it
+    sharded = shard_map(local, mesh=mesh,
+                        in_specs=(P(), P(DATA_AXIS), P(DATA_AXIS), P()),
+                        out_specs=out_specs, check_rep=False)
+    dp = mesh.shape[DATA_AXIS]
+
+    def run(params, cond, keys, sde_mask):
+        if cond.shape[0] % dp != 0:
+            raise ValueError(
+                f"keyed rollout batch {cond.shape[0]} is not divisible by "
+                f"the data axis ({dp} devices) — bucket sizes must be "
+                "dp-aligned")
+        return _jitted(params, cond, keys, sde_mask)
 
     _jitted = jax.jit(sharded)
     return run

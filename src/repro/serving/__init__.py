@@ -1,0 +1,16 @@
+"""``repro.serving`` — the production inference subsystem.
+
+A request-queue engine with bucketed continuous batching (bounded jit
+recompiles + deadline flush), compile-cache warmup, an LRU cond-encoding
+cache, and sharded inference over ``repro.distributed``'s "data" mesh —
+bit-identical per request across bucket layouts, batch mates, and device
+counts (the per-request-keyed rollout invariant).
+
+``FlowSampler`` (repro.api.serving) and ``launch/serve.py`` are thin
+clients; trainers opt in via ``BaseTrainer.attach_engine``.
+"""
+from repro.serving.buckets import BucketGrid, default_buckets
+from repro.serving.engine import CondCache, Request, ServingEngine
+
+__all__ = ["BucketGrid", "default_buckets", "CondCache", "Request",
+           "ServingEngine"]

@@ -1,0 +1,85 @@
+"""Shape-bucket policy for the serving engine.
+
+jit recompiles are the tax on dynamic batching: every distinct
+(batch, num_steps) shape traces and compiles a fresh executable.  The
+engine therefore admits requests into a small fixed grid of batch tiers
+(default: powers of two up to ``max_batch``), pads partial batches up to
+the smallest covering tier, and pre-traces the whole grid at startup — so
+steady-state serving never compiles.
+
+When inference is sharded over a data mesh every tier is rounded up to a
+multiple of the device count (``dp_align``): shard_map needs equal per-
+device slices, and padded lanes are free under the per-request-keyed
+rollout (real lanes are bit-identical regardless of who pads the batch).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+
+def default_buckets(max_batch: int) -> Tuple[int, ...]:
+    """Powers of two up to and including ``max_batch`` (the tier ladder a
+    mixed request load actually exercises: full buckets ride the top tier,
+    deadline-flushed remainders the small ones)."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    tiers = []
+    b = 1
+    while b < max_batch:
+        tiers.append(b)
+        b *= 2
+    tiers.append(max_batch)
+    return tuple(tiers)
+
+
+class BucketGrid:
+    """The (batch,) tier ladder, optionally dp-aligned.
+
+    ``pick(n)`` returns the smallest tier >= n; callers never dispatch more
+    than ``capacity`` (= the largest tier) requests per batch.
+    """
+
+    def __init__(self, buckets: Optional[Sequence[int]] = None, *,
+                 max_batch: int = 8, dp: int = 1):
+        if dp < 1:
+            raise ValueError(f"dp must be >= 1, got {dp}")
+        if buckets:
+            raw = tuple(buckets)
+            over = [b for b in raw if b > max_batch]
+            if over:
+                raise ValueError(
+                    f"bucket sizes {over} exceed max_batch={max_batch} "
+                    "(the memory cap) — raise max_batch or shrink the "
+                    "tiers")
+        else:
+            raw = default_buckets(max_batch)
+        if any(b < 1 for b in raw):
+            raise ValueError(f"bucket sizes must be >= 1, got {raw}")
+        # dp-align each tier, then dedupe (1 and 2 both round to 4 on dp=4)
+        aligned = sorted({-(-b // dp) * dp for b in raw})
+        # alignment must not raise the max_batch memory cap: clamp the
+        # ladder to the largest dp multiple <= max_batch (dp itself when
+        # the cap is below one per-device lane each — the smallest batch
+        # a mesh can serve at all)
+        cap = max(dp, (max_batch // dp) * dp)
+        self.dp = dp
+        self.sizes: Tuple[int, ...] = (tuple(b for b in aligned if b <= cap)
+                                       or (cap,))
+
+    @property
+    def capacity(self) -> int:
+        return self.sizes[-1]
+
+    def pick(self, n: int) -> int:
+        """Smallest tier covering ``n`` requests (n <= capacity)."""
+        if n < 1:
+            raise ValueError(f"cannot bucket {n} requests")
+        for b in self.sizes:
+            if b >= n:
+                return b
+        raise ValueError(
+            f"{n} requests exceed the largest bucket ({self.capacity}); "
+            "dispatch in capacity-sized slices")
+
+    def __repr__(self) -> str:
+        return f"BucketGrid(sizes={self.sizes}, dp={self.dp})"

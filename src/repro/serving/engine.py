@@ -1,0 +1,440 @@
+"""``ServingEngine`` — request-queue serving with bucketed continuous
+batching, compile-cache warmup, cond-encoding cache, and sharded inference.
+
+Architecture (the production path the ROADMAP north star asks for):
+
+* **Requests**, not arrays, are the unit of work: ``submit()`` enqueues a
+  (cond, key, num_steps) request and returns a handle; full buckets
+  dispatch immediately (continuous batching — a full batch never waits),
+  partial buckets flush when the oldest request crosses the deadline
+  (``poll``) or on ``drain()``.
+* **Shape buckets** bound jit recompiles: batches are padded up to a fixed
+  tier ladder (:class:`repro.serving.buckets.BucketGrid`), and ``warmup()``
+  pre-traces the whole (bucket × num_steps) grid so steady-state serving
+  never compiles.  Padding is *correct*, not just safe, because execution
+  uses the per-request-keyed rollout (:func:`repro.core.rollout
+  .rollout_keyed`): each request's latent is a pure function of its own
+  (cond, key), bit-identical across bucket sizes, batch mates, and device
+  layouts.
+* **Cond-encoding cache**: repeat prompts skip the ConditionProvider (an
+  LRU keyed by prompt string) — the serving-side analogue of the paper's
+  §2.2 preprocessing cache.
+* **Sharded inference** reuses ``repro.distributed``'s "data" mesh: with a
+  mesh, execution goes through ``make_rollout_keyed_sharded`` (cond and
+  per-request keys both batch-sharded, no axis-index key folds), so
+  ``dist.data_parallel=N`` serves N-way today on faked CPU devices and on
+  real accelerators unchanged — with output bit-identical per request to
+  single-device.
+
+Trainers can opt their online rollouts into the same engine
+(``BaseTrainer.attach_engine``): ``ServingEngine.rollout`` returns full
+:class:`Trajectory` batches (capacity-chunked, bucket-padded, unpadded on
+the way out), sharing the compile cache with the serving path.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict, deque
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import distributed
+from repro.core.rollout import Trajectory, request_keys
+from repro.serving.buckets import BucketGrid
+
+
+class _BatchResult:
+    """Shared result holder for one dispatched bucket: keeps the device
+    array unmaterialized (dispatches stay async — the next batch's queue
+    work overlaps this one's compute) and pays the device->host copy once
+    per BATCH on first access, never per request."""
+
+    __slots__ = ("_dev", "_np")
+
+    def __init__(self, x0_dev: jax.Array):
+        self._dev = x0_dev
+        self._np: Optional[np.ndarray] = None
+
+    def row(self, i: int) -> np.ndarray:
+        if self._np is None:
+            self._np = np.asarray(self._dev)
+            self._dev = None
+        return self._np[i]
+
+
+class Request:
+    """One enqueued sampling request; doubles as its result handle.
+
+    cond/key/result live host-side (numpy): per-row device slicing costs
+    ~ms per op on the queue path, so the engine crosses the device boundary
+    exactly twice per *dispatch* (one device_put in, one lazy copy out),
+    never per request."""
+
+    __slots__ = ("rid", "cond", "key", "num_steps", "arrival", "_result")
+
+    def __init__(self, rid: int, cond: np.ndarray, key: np.ndarray,
+                 num_steps: int, arrival: float):
+        self.rid = rid
+        self.cond = cond
+        self.key = key
+        self.num_steps = num_steps
+        self.arrival = arrival
+        self._result: Optional[tuple] = None        # (_BatchResult, row)
+
+    @property
+    def done(self) -> bool:
+        return self._result is not None
+
+    def result(self) -> np.ndarray:
+        if self._result is None:
+            raise RuntimeError(
+                f"request {self.rid} has not been served yet — call "
+                "engine.poll() past its deadline or engine.drain()")
+        holder, row = self._result
+        return holder.row(row)
+
+
+class CondCache:
+    """LRU prompt -> condition-embedding cache (repeat prompts skip the
+    ConditionProvider entirely)."""
+
+    def __init__(self, max_entries: int = 1024):
+        self.max_entries = max_entries
+        self._store: "OrderedDict[str, np.ndarray]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, prompt: str) -> Optional[np.ndarray]:
+        cond = self._store.get(prompt)
+        if cond is None:
+            self.misses += 1
+            return None
+        self._store.move_to_end(prompt)
+        self.hits += 1
+        return cond
+
+    def put(self, prompt: str, cond: np.ndarray) -> None:
+        self._store[prompt] = cond
+        self._store.move_to_end(prompt)
+        while len(self._store) > self.max_entries:
+            self._store.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+
+class ServingEngine:
+    """Bucketed continuous-batching inference over a FlowAdapter.
+
+    ``params`` may be None for the trainer-rollout path (params are then
+    passed per :meth:`rollout` call); the queue path (:meth:`submit` /
+    :meth:`serve`) requires them at construction.
+    """
+
+    def __init__(self, adapter, scheduler, params=None, *,
+                 num_steps: int, max_batch: int = 8,
+                 buckets: Optional[Sequence[int]] = None,
+                 deadline_s: float = 0.005,
+                 mesh=None, provider=None, cond_len: int = 16,
+                 cond_cache_entries: int = 1024,
+                 clock: Callable[[], float] = time.monotonic):
+        if num_steps < 1:
+            raise ValueError(f"num_steps must be >= 1, got {num_steps}")
+        self.adapter = adapter
+        self.scheduler = scheduler
+        self.params = params
+        self.num_steps = num_steps
+        self.deadline_s = deadline_s
+        self.mesh = mesh
+        self.provider = provider
+        self.cond_len = cond_len
+        self.clock = clock
+        dp = 1 if mesh is None else mesh.shape[distributed.DATA_AXIS]
+        self.grid = BucketGrid(buckets, max_batch=max_batch, dp=dp)
+        self.cond_cache = CondCache(cond_cache_entries)
+        # one jitted executor per (num_steps, x0_only) tier; jit's shape
+        # cache then holds one executable per bucket size underneath it.
+        # The queue path uses the x0-only variant (XLA drops the stacked
+        # trajectory buffers); trainer rollouts get the full Trajectory.
+        self._fns: Dict[tuple, Callable] = {}
+        self._masks: Dict[int, jax.Array] = {}
+        self._traced: set = set()          # (bucket, num_steps) ever run
+        self._warmed: set = set()          # (bucket, num_steps) pre-traced
+        self._queues: Dict[int, deque] = {}
+        self._next_rid = 0
+        self.counters: Dict[str, Any] = {
+            "requests": 0, "dispatches": {}, "padded_lanes": 0,
+            "compiles": 0, "cold_dispatches": 0, "warmup_s": 0.0,
+        }
+
+    # ---------------------------------------------------------- construction
+    @classmethod
+    def for_trainer(cls, trainer, **kw) -> "ServingEngine":
+        """Engine sharing a trainer's adapter/scheduler/num_steps/mesh —
+        the object to pass to ``trainer.attach_engine``.  ``max_batch``
+        caps the rollout chunk size (memory bound); batches larger than it
+        run in capacity-sized slices."""
+        return cls(trainer.adapter, trainer.scheduler,
+                   num_steps=trainer.flow.num_steps, mesh=trainer.mesh, **kw)
+
+    # -------------------------------------------------------------- encoding
+    def encode(self, prompts: Sequence[str]) -> np.ndarray:
+        """(N, Lc, D) condition embeddings (host-side), LRU-cached per
+        prompt; misses are encoded in ONE ConditionProvider batch."""
+        if self.provider is None:
+            raise ValueError(
+                "this engine has no ConditionProvider — submit cond "
+                "embeddings directly or construct with provider=...")
+        out: Dict[int, np.ndarray] = {}
+        miss_rows: Dict[str, List[int]] = {}     # unique prompt -> indices
+        for i, p in enumerate(prompts):
+            if p in miss_rows:                   # in-batch duplicate: skips
+                miss_rows[p].append(i)           # the provider => a hit
+                self.cond_cache.hits += 1
+                continue
+            cached = self.cond_cache.get(p)
+            if cached is None:
+                miss_rows[p] = [i]
+            else:
+                out[i] = cached
+        if miss_rows:
+            fresh = np.asarray(
+                self.provider.get(list(miss_rows))["cond"])
+            for j, (p, rows) in enumerate(miss_rows.items()):
+                # .copy(): a cached row must not be a view pinning the
+                # whole miss-batch array in memory past LRU eviction
+                self.cond_cache.put(p, fresh[j].copy())
+                for i in rows:
+                    out[i] = fresh[j]
+        return np.stack([out[i] for i in range(len(prompts))])
+
+    # ----------------------------------------------------------------- queue
+    def submit(self, cond=None, *, prompt: Optional[str] = None,
+               key: Optional[jax.Array] = None, seed: Optional[int] = None,
+               num_steps: Optional[int] = None) -> Request:
+        """Enqueue one request; returns its handle.  The request's latent is
+        fully determined by (cond, key, num_steps) — the same key always
+        yields the same latent, whatever batch it lands in."""
+        if (cond is None) == (prompt is None):
+            raise ValueError("submit exactly one of cond= or prompt=")
+        if cond is None:
+            cond = self.encode([prompt])[0]
+        cond = np.asarray(cond)
+        if cond.ndim != 2:
+            raise ValueError(
+                f"request cond must be (Lc, cond_dim), got {cond.shape}")
+        if key is None:
+            key = jax.random.PRNGKey(
+                seed if seed is not None else self._next_rid)
+        key = np.asarray(key)
+        steps = self._resolve_steps(num_steps)
+        req = Request(self._next_rid, cond, key, steps, self.clock())
+        self._next_rid += 1
+        self.counters["requests"] += 1
+        q = self._queues.setdefault(steps, deque())
+        q.append(req)
+        # continuous batching: a full bucket never waits for the deadline
+        while len(q) >= self.grid.capacity:
+            self._dispatch([q.popleft() for _ in range(self.grid.capacity)])
+        return req
+
+    def poll(self) -> int:
+        """Flush every partial batch whose oldest request has crossed the
+        deadline.  Returns the number of requests dispatched."""
+        now = self.clock()
+        n = 0
+        for q in self._queues.values():
+            while q and (now - q[0].arrival) >= self.deadline_s:
+                take = min(len(q), self.grid.capacity)
+                self._dispatch([q.popleft() for _ in range(take)])
+                n += take
+        return n
+
+    def drain(self) -> int:
+        """Dispatch everything still queued, deadline or not."""
+        n = 0
+        for q in self._queues.values():
+            while q:
+                take = min(len(q), self.grid.capacity)
+                self._dispatch([q.popleft() for _ in range(take)])
+                n += take
+        return n
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # ------------------------------------------------------------- execution
+    def _resolve_steps(self, num_steps: Optional[int]) -> int:
+        if num_steps is None:
+            return self.num_steps
+        if num_steps < 1:
+            raise ValueError(f"num_steps must be >= 1, got {num_steps}")
+        return num_steps
+
+    def _account(self, bucket: int, num_steps: int, n_real: int,
+                 x0_only: bool) -> None:
+        """Single home of the dispatch bookkeeping (queue + rollout paths):
+        compile-cache tracking and the dispatch/padding counters.  Trace
+        shapes are keyed by (bucket, steps, x0_only) because the two
+        executor variants compile separately — warmup covers the queue
+        (x0_only) variant, so a trainer-path rollout at the same (bucket,
+        steps) is still, correctly, a cold compile."""
+        self._note_trace((bucket, num_steps, x0_only))
+        d = self.counters["dispatches"]
+        d[(bucket, num_steps)] = d.get((bucket, num_steps), 0) + 1
+        self.counters["padded_lanes"] += bucket - n_real
+
+    def _note_trace(self, shape, during_warmup: bool = False) -> None:
+        if shape in self._traced:
+            return
+        self._traced.add(shape)
+        self.counters["compiles"] += 1
+        if not during_warmup and shape not in self._warmed:
+            self.counters["cold_dispatches"] += 1
+
+    def _fn(self, num_steps: int, x0_only: bool = False) -> Callable:
+        fn = self._fns.get((num_steps, x0_only))
+        if fn is None:
+            fn = distributed.make_rollout_keyed_sharded(
+                self.adapter, self.scheduler, num_steps, self.mesh,
+                x0_only=x0_only)
+            self._fns[(num_steps, x0_only)] = fn
+        return fn
+
+    def _mask(self, num_steps: int) -> jax.Array:
+        mask = self._masks.get(num_steps)
+        if mask is None:
+            mask = self._masks[num_steps] = jnp.ones((num_steps,), bool)
+        return mask
+
+    def _execute(self, cond, keys, num_steps: int) -> jax.Array:
+        """Run one bucket-shaped batch -> (bucket, Lt, ld) latents
+        (accounting is the caller's job)."""
+        return self._fn(num_steps, x0_only=True)(
+            self.params, cond, keys, self._mask(num_steps))
+
+    def _pad(self, arr: jax.Array, bucket: int) -> jax.Array:
+        pad = bucket - arr.shape[0]
+        if not pad:
+            return arr
+        xp = np if isinstance(arr, np.ndarray) else jnp
+        return xp.concatenate(
+            [arr, xp.zeros((pad,) + arr.shape[1:], arr.dtype)])
+
+    def _dispatch(self, batch: List[Request]) -> None:
+        if self.params is None:
+            raise RuntimeError(
+                "engine has no params — pass params= at construction for "
+                "the queue path (or use engine.rollout for trainers)")
+        steps = batch[0].num_steps
+        bucket = self.grid.pick(len(batch))
+        self._account(bucket, steps, len(batch), x0_only=True)
+        cond = self._pad(np.stack([r.cond for r in batch]), bucket)
+        keys = self._pad(np.stack([r.key for r in batch]), bucket)
+        holder = _BatchResult(self._execute(cond, keys, steps))
+        for i, r in enumerate(batch):
+            r._result = (holder, i)
+
+    # ----------------------------------------------------------- conveniences
+    def serve(self, requests: Union[Sequence[str], jax.Array],
+              key: Optional[jax.Array] = None,
+              num_steps: Optional[int] = None) -> jax.Array:
+        """Synchronous batch serve: prompts (via the cond cache) or a
+        (N, Lc, D) cond array -> (N, Lt, ld) latents.  Request i's key is
+        ``fold_in(key, i)`` — per-request results are independent of N,
+        bucket layout, and max_batch."""
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        if len(requests) and isinstance(requests[0], str):
+            cond = self.encode(list(requests))
+        else:
+            cond = np.asarray(requests)
+        keys = np.asarray(request_keys(key, cond.shape[0]))
+        handles = [self.submit(cond=cond[i], key=keys[i],
+                               num_steps=num_steps)
+                   for i in range(cond.shape[0])]
+        self.drain()
+        return jnp.asarray(np.stack([h.result() for h in handles]))
+
+    def rollout(self, params, cond: jax.Array, key: jax.Array,
+                sde_mask: Optional[jax.Array] = None,
+                num_steps: Optional[int] = None) -> Trajectory:
+        """Trainer-facing batched rollout through the engine's compile
+        cache: per-request keys (fold_in(key, i)), capacity-sized chunks,
+        bucket padding in, exact-size Trajectory out."""
+        steps = self._resolve_steps(num_steps)
+        if sde_mask is None:
+            sde_mask = jnp.ones((steps,), bool)
+        B = cond.shape[0]
+        keys = request_keys(key, B)
+        cap = self.grid.capacity
+        chunks: List[Trajectory] = []
+        for i in range(0, B, cap):
+            c, k = cond[i:i + cap], keys[i:i + cap]
+            n = c.shape[0]
+            bucket = self.grid.pick(n)
+            self._account(bucket, steps, n, x0_only=False)
+            traj = self._fn(steps)(params, self._pad(c, bucket),
+                                   self._pad(k, bucket), sde_mask)
+            chunks.append(Trajectory(
+                xs=traj.xs[:, :n], logps=traj.logps[:, :n], ts=traj.ts,
+                sde_mask=traj.sde_mask, cond=traj.cond[:n]))
+        if len(chunks) == 1:
+            return chunks[0]
+        return Trajectory(
+            xs=jnp.concatenate([t.xs for t in chunks], axis=1),
+            logps=jnp.concatenate([t.logps for t in chunks], axis=1),
+            ts=chunks[0].ts, sde_mask=chunks[0].sde_mask,
+            cond=jnp.concatenate([t.cond for t in chunks], axis=0))
+
+    # ---------------------------------------------------------------- warmup
+    def warmup(self, num_steps_tiers: Optional[Sequence[int]] = None,
+               params=None) -> Dict[str, float]:
+        """Pre-trace the full (bucket × num_steps) grid so steady-state
+        serving never compiles.  Returns per-shape trace+first-run seconds;
+        the total also lands in ``counters['warmup_s']``."""
+        params = params if params is not None else self.params
+        if params is None:
+            raise RuntimeError("warmup needs params")
+        tiers = sorted(set(num_steps_tiers or [self.num_steps]))
+        report: Dict[str, float] = {}
+        for steps in tiers:
+            for bucket in self.grid.sizes:
+                cond = np.zeros((bucket, self.cond_len,
+                                 self.adapter.cond_dim), np.float32)
+                keys = np.zeros((bucket, 2), np.uint32)
+                t0 = time.perf_counter()
+                x0 = self._fn(steps, x0_only=True)(params, cond, keys,
+                                                   self._mask(steps))
+                jax.block_until_ready(x0)
+                dt = time.perf_counter() - t0
+                report[f"b{bucket}/s{steps}"] = dt
+                self._warmed.add((bucket, steps, True))
+                self._note_trace((bucket, steps, True), during_warmup=True)
+        self.counters["warmup_s"] += sum(report.values())
+        return report
+
+    # ----------------------------------------------------------------- stats
+    @property
+    def stats(self) -> Dict[str, Any]:
+        c = self.counters
+        return {
+            "requests": c["requests"],
+            "pending": self.pending(),
+            "dispatches": dict(c["dispatches"]),
+            "padded_lanes": c["padded_lanes"],
+            "compiled_shapes": sorted(self._traced),
+            "warmed_shapes": sorted(self._warmed),
+            "compiles": c["compiles"],
+            "cold_dispatches": c["cold_dispatches"],
+            "warmup_s": c["warmup_s"],
+            "cond_cache": {"hits": self.cond_cache.hits,
+                           "misses": self.cond_cache.misses,
+                           "entries": len(self.cond_cache)},
+            "buckets": self.grid.sizes,
+            "data_parallel": (1 if self.mesh is None
+                              else self.mesh.shape[distributed.DATA_AXIS]),
+        }

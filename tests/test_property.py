@@ -107,3 +107,104 @@ def test_registry_idempotent_lookup(seed):
     for kind in ("trainer", "scheduler", "reward", "aggregator"):
         for name in registry.names(kind):
             assert registry.lookup(kind, name) is registry.lookup(kind, name)
+
+
+# --------------------------------------------------- rollout-level invariants
+
+class _LinearAdapter:
+    """Closed-form velocity field (v = w·x + t·c̄) — exercises the rollout
+    integrators without a backbone, keeping hypothesis sweeps fast."""
+
+    class flow_cfg:
+        latent_tokens = 4
+        latent_dim = 3
+
+    def init_latent(self, key, batch):
+        return jax.random.normal(key, (batch, 4, 3), jnp.float32)
+
+    def velocity(self, params, x, t, cond):
+        return params["w"] * x + t[:, None, None] * cond.mean(
+            axis=(1, 2), keepdims=True)
+
+
+_LIN_PARAMS = {"w": jnp.float32(-0.3)}
+
+
+@given(st.sampled_from(["flow_sde", "dance_sde"]), st.integers(2, 10),
+       st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_sde_eta_zero_matches_ode_trajectory(name, steps, seed):
+    """η=0 collapses every SDE scheduler onto the deterministic flow: the
+    full trajectory (and zero log-probs) must match the ODE scheduler's
+    under the same key — the paper's 'one knob' degeneracy claim."""
+    from repro.core.rollout import rollout
+    adapter = _LinearAdapter()
+    key = jax.random.PRNGKey(seed)
+    cond = jax.random.normal(jax.random.fold_in(key, 1), (2, 2, 5))
+    t_sde = rollout(adapter, _LIN_PARAMS, cond, key,
+                    build_sched(name, 0.0), steps)
+    t_ode = rollout(adapter, _LIN_PARAMS, cond, key,
+                    build_sched("ode", 0.0), steps)
+    np.testing.assert_allclose(np.asarray(t_sde.xs), np.asarray(t_ode.xs),
+                               atol=1e-6, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(t_sde.logps), 0.0)
+
+
+@given(st.sampled_from(["flow_sde", "dance_sde"]), st.integers(2, 8),
+       st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_keyed_rollout_eta_zero_and_batch_invariance(name, steps, seed):
+    """rollout_keyed: η=0 matches ODE, and any sub-batch of (cond, keys)
+    rows is bit-identical to the same rows in the full batch — the serving
+    engine's bucketing/sharding invariant."""
+    from repro.core.rollout import request_keys, rollout_keyed
+    adapter = _LinearAdapter()
+    key = jax.random.PRNGKey(seed)
+    cond = jax.random.normal(jax.random.fold_in(key, 1), (4, 2, 5))
+    keys = request_keys(key, 4)
+    t_sde = rollout_keyed(adapter, _LIN_PARAMS, cond, keys,
+                          build_sched(name, 0.0), steps)
+    t_ode = rollout_keyed(adapter, _LIN_PARAMS, cond, keys,
+                          build_sched("ode", 0.0), steps)
+    np.testing.assert_allclose(np.asarray(t_sde.xs), np.asarray(t_ode.xs),
+                               atol=1e-6, rtol=1e-6)
+    lo, hi = seed % 3, seed % 3 + 2
+    sub = rollout_keyed(adapter, _LIN_PARAMS, cond[lo:hi], keys[lo:hi],
+                        build_sched(name, 0.0), steps)
+    np.testing.assert_array_equal(np.asarray(t_sde.xs[:, lo:hi]),
+                                  np.asarray(sub.xs))
+
+
+@given(st.integers(1, 24), st.integers(0, 30), st.integers(0, 60))
+@settings(**SET)
+def test_mix_sde_mask_window_shift_invariants(num_steps, window, shift):
+    """MixGRPO's sliding SDE window: popcount is min(window, num_steps),
+    shifting rolls the mask cyclically, and the extremes degenerate to
+    all-ODE / all-SDE."""
+    from repro.core.rollout import mix_sde_mask
+    m = np.asarray(mix_sde_mask(num_steps, window, shift))
+    assert m.shape == (num_steps,) and m.dtype == bool
+    assert m.sum() == min(window, num_steps)
+    base = np.asarray(mix_sde_mask(num_steps, window, 0))
+    np.testing.assert_array_equal(m, np.roll(base, shift % num_steps))
+    assert not np.asarray(mix_sde_mask(num_steps, 0, shift)).any()
+    assert np.asarray(mix_sde_mask(num_steps, num_steps, shift)).all()
+
+
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_group_repeat_round_trips(P, G, seed):
+    """(P, Lc, D) -> (P·G, Lc, D): group g of prompt p occupies rows
+    p·G..p·G+G−1, every group row equals its prompt, and striding / group
+    reshape both recover the original."""
+    from repro.core.rollout import group_repeat
+    cond = jax.random.normal(jax.random.PRNGKey(seed), (P, 3, 2))
+    g = group_repeat(cond, G)
+    assert g.shape == (P * G, 3, 2)
+    grouped = np.asarray(g).reshape(P, G, 3, 2)
+    np.testing.assert_array_equal(grouped,
+                                  np.broadcast_to(np.asarray(cond)[:, None],
+                                                  (P, G, 3, 2)))
+    np.testing.assert_array_equal(np.asarray(g[::G]), np.asarray(cond))
+    np.testing.assert_array_equal(np.asarray(group_repeat(cond, 1)),
+                                  np.asarray(cond))
