@@ -17,10 +17,10 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 DIST_FLAGS := --xla_force_host_platform_device_count=4
 
-.PHONY: verify deps-check test test-interpret test-dist test-serve smoke \
-	smoke-dist
+.PHONY: verify deps-check test test-interpret test-dist test-serve \
+	test-perf-dist smoke smoke-dist bench-train
 
-verify: deps-check test test-interpret test-dist test-serve
+verify: deps-check test test-interpret test-dist test-serve test-perf-dist
 
 # Core modules must import on a bare jax+numpy interpreter: no dacite, and
 # zstandard/msgpack/hypothesis only ever loaded behind soft gates.
@@ -58,6 +58,17 @@ test-serve:
 	    --requests 9 --max-batch 4 --deadline-ms 2 \
 	    --set flow.num_steps=2 --set dist.data_parallel=4 \
 	    --set 'data.encoder={"cond_dim": 512, "cond_len": 8, "vocab": 512, "hidden": 64}'
+
+# repro.perf composition: the perf tests whose remat/fusion × data-parallel
+# × microbatch assertions need real (faked) devices re-run ON 4 of them
+# (the single-device semantics already ran in `make test`)
+test-perf-dist:
+	XLA_FLAGS="$(DIST_FLAGS)" $(PY) -m pytest -x -q tests/test_perf.py \
+	    -k "data_parallel or under_mesh"
+
+# train-step perf trajectory: writes BENCH_train_step.json at the repo root
+bench-train:
+	$(PY) -m benchmarks.train_step
 
 smoke:
 	$(PY) -m repro.launch.train --reduced --steps 2 \

@@ -8,7 +8,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import preprocessing, reward_curves, roofline, \
-        scaling, sde_dynamics, serving
+        scaling, sde_dynamics, serving, train_step
 
     suites = [
         ("sde_dynamics (paper Table 1)", sde_dynamics.run),
@@ -17,6 +17,7 @@ def main() -> None:
         ("roofline (deliverable g)", roofline.run),
         ("scaling (repro.distributed data-parallel)", scaling.run),
         ("serving (repro.serving bucketed engine)", serving.run),
+        ("train_step (repro.perf remat/fused policies)", train_step.run),
     ]
     print("name,us_per_call,derived")
     failures = 0

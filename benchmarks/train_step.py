@@ -1,0 +1,165 @@
+"""Benchmark: the RL train step under the ``repro.perf`` policies.
+
+Starts the train-step perf trajectory (ISSUE 5): step time per
+trainer × remat mode × fused/unfused on the reduced arch, measured
+round-robin interleaved (every config is timed in every round, so drift in
+machine load biases no config), plus ``memory_analysis()`` peak temp bytes
+per remat mode at ``num_steps=8`` — the memory criterion is asserted here
+(compile-time analysis is deterministic; timing is only reported).
+
+``python -m benchmarks.train_step`` (``make bench-train``) writes
+``BENCH_train_step.json`` at the repo root; ``benchmarks/run.py`` runs the
+same matrix for the CSV report.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+NUM_STEPS = 8          # the memory criterion's num_steps>=8 regime
+PROMPTS = 4
+GROUP = 4
+STEPS_PER_ROUND = 3
+ROUNDS = 3
+TRAINERS = ("flow_grpo", "nft")
+REMATS = ("none", "scan")
+
+OUT_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_train_step.json")
+
+
+def _flow():
+    from repro.config import FlowRLConfig, RewardSpec
+    return FlowRLConfig(
+        num_steps=NUM_STEPS, group_size=GROUP, latent_tokens=8, latent_dim=8,
+        clip_range=0.2,
+        rewards=(RewardSpec("text_render", 1.0,
+                 args={"latent_dim": 8, "latent_tokens": 8}),))
+
+
+def _make(trainer_type: str, perf):
+    import jax
+    from repro import configs, registry
+    from repro.config import OptimConfig
+    opt = OptimConfig(lr=1e-3, total_steps=1000, warmup_steps=2)
+    return registry.build("trainer", trainer_type,
+                          configs.get_reduced("flux_dit"), _flow(), opt,
+                          key=jax.random.PRNGKey(0), perf=perf)
+
+
+def _bench_steps() -> List[Dict]:
+    import jax
+    import jax.numpy as jnp
+    from repro.config import PerfConfig
+    key = jax.random.PRNGKey(0)
+    cond = jax.random.normal(key, (PROMPTS, 4, 512), jnp.float32)
+
+    grid = [(tt, remat, fuse) for tt in TRAINERS for remat in REMATS
+            for fuse in (False, True)]
+    entries = []
+    for tt, remat, fuse in grid:
+        tr = _make(tt, PerfConfig(remat=remat, fuse_step=fuse))
+        tr.step(cond, key, it=0)                       # compile
+        jax.block_until_ready(tr.state.params)
+        entries.append({"trainer": tt, "remat": remat, "fuse": fuse,
+                        "tr": tr, "best_s": float("inf"), "it": 1})
+
+    for _ in range(ROUNDS):                            # interleaved rounds
+        for e in entries:
+            t0 = time.perf_counter()
+            for _ in range(STEPS_PER_ROUND):
+                e["tr"].step(cond, key, it=e["it"])
+                e["it"] += 1
+            jax.block_until_ready(e["tr"].state.params)
+            e["best_s"] = min(e["best_s"],
+                              (time.perf_counter() - t0) / STEPS_PER_ROUND)
+
+    base = {tt: next(e["best_s"] for e in entries
+                     if e["trainer"] == tt and e["remat"] == "none"
+                     and not e["fuse"]) for tt in TRAINERS}
+    return [{"trainer": e["trainer"], "remat": e["remat"], "fuse": e["fuse"],
+             "step_ms": round(e["best_s"] * 1e3, 2),
+             "speedup_vs_unoptimized": round(base[e["trainer"]] / e["best_s"],
+                                             3)}
+            for e in entries]
+
+
+def _bench_memory() -> Dict:
+    """Peak temp bytes of the compiled update per remat mode (AOT — nothing
+    runs).  Asserts the ISSUE 5 acceptance criterion: remat="scan" cuts
+    temp bytes by >= 30% at num_steps>=8."""
+    import jax
+    import jax.numpy as jnp
+    from repro.config import PerfConfig
+    cond = jax.ShapeDtypeStruct((PROMPTS, 4, 512), jnp.float32)
+    out: Dict[str, Dict] = {}
+    for mode in ("none", "scan", "block"):
+        tr = _make("flow_grpo", PerfConfig(remat=mode))
+        out[mode] = tr.memory_stats(cond)["update"]
+    none_t, scan_t = out["none"]["temp_bytes"], out["scan"]["temp_bytes"]
+    out["scan_temp_reduction"] = round(1.0 - scan_t / none_t, 3)
+    assert scan_t <= 0.7 * none_t, (
+        f"remat=scan temp bytes {scan_t} not >=30% below none {none_t}")
+    return out
+
+
+def collect() -> Dict:
+    steps = _bench_steps()
+    mem = _bench_memory()
+    fused_speedup = {
+        tt: round(next(s["step_ms"] for s in steps if s["trainer"] == tt
+                       and s["remat"] == "none" and not s["fuse"])
+                  / next(s["step_ms"] for s in steps if s["trainer"] == tt
+                         and s["remat"] == "none" and s["fuse"]), 3)
+        for tt in TRAINERS}
+    return {
+        "config": {"arch": "flux_dit/reduced", "num_steps": NUM_STEPS,
+                   "prompts": PROMPTS, "group_size": GROUP,
+                   "batch": PROMPTS * GROUP,
+                   "steps_per_round": STEPS_PER_ROUND, "rounds": ROUNDS},
+        "steps": steps,
+        "memory": mem,
+        "criteria": {"fused_speedup_vs_three_jit": fused_speedup,
+                     "scan_temp_reduction": mem["scan_temp_reduction"]},
+    }
+
+
+def run() -> List[Dict]:
+    """benchmarks/run.py entry point: one CSV row per timed config plus a
+    memory row per remat mode."""
+    res = collect()
+    rows = [{
+        "name": "train_step_{}_{}{}".format(s["trainer"], s["remat"],
+                                            "_fused" if s["fuse"] else ""),
+        "us_per_call": round(s["step_ms"] * 1e3, 1),
+        "derived": {"speedup_vs_unoptimized": s["speedup_vs_unoptimized"]},
+    } for s in res["steps"]]
+    for mode in ("none", "scan", "block"):
+        rows.append({
+            "name": f"train_step_mem_{mode}",
+            "us_per_call": 0.0,
+            "derived": {"temp_bytes": res["memory"][mode]["temp_bytes"]},
+        })
+    return rows
+
+
+def main() -> None:
+    res = collect()
+    with open(OUT_JSON, "w") as f:
+        json.dump(res, f, indent=1)
+    print(f"[bench] wrote {OUT_JSON}")
+    for s in res["steps"]:
+        print(f"  {s['trainer']:>10} remat={s['remat']:<5} "
+              f"fuse={str(s['fuse']):<5} {s['step_ms']:8.2f} ms  "
+              f"({s['speedup_vs_unoptimized']:.3f}x vs unoptimized)")
+    print(f"  fused speedup vs three-jit path: "
+          f"{res['criteria']['fused_speedup_vs_three_jit']}")
+    print(f"  remat=scan temp-bytes reduction: "
+          f"{res['criteria']['scan_temp_reduction']:.1%}")
+
+
+if __name__ == "__main__":
+    main()

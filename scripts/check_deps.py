@@ -19,6 +19,7 @@ CORE_MODULES = [
     "repro.data.prompts",
     "repro.distributed",
     "repro.optim",
+    "repro.perf",
     "repro.serving",
 ]
 

@@ -195,7 +195,8 @@ class Experiment:
             self._trainer = registry.build_from_config(
                 "trainer", self.cfg.flow.trainer_type,
                 self.arch, self.flow, self.cfg.optim,
-                key=key, cond_dim=self.cond_dim, dist=self.cfg.dist)
+                key=key, cond_dim=self.cond_dim, dist=self.cfg.dist,
+                perf=self.cfg.perf)
         return self._trainer
 
     def build_sampler(self, key: Optional[jax.Array] = None,
@@ -240,12 +241,14 @@ class Experiment:
         run, moving loop.steps + optim.total_steps/warmup_steps) may
         legitimately change between restarts, as may the device layout
         (``dist`` — a checkpoint written at one data_parallel/microbatch
-        resumes at any other); everything else — arch, trainer, rewards,
-        dynamics, data — is guarded against silently resuming someone
-        else's state."""
+        resumes at any other, and ``perf`` — remat/fusion/precision are
+        performance policy, not what is being trained); everything else —
+        arch, trainer, rewards, dynamics, data — is guarded against
+        silently resuming someone else's state."""
         ident = to_dict(self.cfg)
         ident.pop("loop", None)
         ident.pop("dist", None)
+        ident.pop("perf", None)
         for k in ("total_steps", "warmup_steps"):
             ident["optim"].pop(k, None)
         # normalize through JSON so tuples (rewards, betas) compare equal
@@ -267,6 +270,7 @@ class Experiment:
         with open(path) as f:
             saved = json.load(f)
         saved.pop("dist", None)                     # normalize like current
+        saved.pop("perf", None)
         for k in ("total_steps", "warmup_steps"):
             saved.get("optim", {}).pop(k, None)
         current = self._ckpt_identity()

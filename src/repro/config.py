@@ -303,6 +303,32 @@ class DistConfig:
 
 
 @dataclass(frozen=True)
+class PerfConfig:
+    """Train-step performance policy (``repro.perf``).
+
+    Like :class:`DistConfig` this is a *runtime* choice, not experiment
+    identity: checkpoints written under one perf policy resume under any
+    other.  ``remat``: activation rematerialization for the RL hot loop —
+    ``"none"`` stores full backbone activations for every denoising step of
+    the loss scan; ``"scan"`` wraps the rollout/loss scan bodies in
+    ``jax.checkpoint`` (bit-identical losses/gradients on XLA:CPU — the
+    scan backward structurally isolates the body, so the recompute graph
+    matches); ``"block"`` additionally checkpoints each backbone layer
+    block inside the velocity forward (f32-rounding-equal only: XLA
+    re-fuses the open-graph remat).  ``fuse_step``: compile
+    sample→rewards→advantages→update into ONE donated jit (step metrics
+    computed on device inside it) instead of three host-dispatched jits.
+    ``policy_dtype``: explicit activation compute dtype for the velocity
+    field ("" = the parameter dtype, today's behaviour; log-probabilities
+    and the optimizer always stay float32).  ``log_memory``: compile the
+    update ahead of time and report ``memory_analysis()`` byte counts."""
+    remat: str = "none"            # none | scan | block
+    fuse_step: bool = False
+    policy_dtype: str = ""         # "" | "bfloat16" | "float32"
+    log_memory: bool = False
+
+
+@dataclass(frozen=True)
 class DataConfig:
     """Prompt-dataset + frozen-encoder selection for an Experiment."""
     dataset: str = "synthetic"           # registry name ("dataset" kind)
@@ -347,6 +373,7 @@ class RunConfig:
     optim: OptimConfig = field(default_factory=OptimConfig)
     flow: FlowRLConfig = field(default_factory=FlowRLConfig)
     dist: DistConfig = field(default_factory=DistConfig)
+    perf: PerfConfig = field(default_factory=PerfConfig)
     data: DataConfig = field(default_factory=DataConfig)
     loop: LoopConfig = field(default_factory=LoopConfig)
     param_dtype: str = "bfloat16"

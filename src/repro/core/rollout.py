@@ -31,31 +31,82 @@ class Trajectory(NamedTuple):
         return self.xs[-1]
 
 
+SDE_MODES = ("mixed", "all_sde", "all_ode")
+
+
+def checkpoint_scan_body(body, remat: str):
+    """Wrap a ``lax.scan`` body in ``jax.checkpoint`` under the
+    ``PerfConfig.remat`` policy — the one place the policy maps onto the
+    primitive (the rollout below and the GRPO loss scan both use it).
+    Applies for both "scan" and "block": block remat checkpoints layers
+    *inside* the body too, but without the outer scan checkpoint the scan
+    backward would still save every body's residuals, defeating it."""
+    if remat == "none":
+        return body
+    return jax.checkpoint(body)
+
+
 def rollout(adapter: FlowAdapter, params, cond: jax.Array, key: jax.Array,
             scheduler: SDESchedulerMixin, num_steps: int,
-            sde_mask: Optional[jax.Array] = None) -> Trajectory:
-    """cond: (B, Lc, cond_dim) — already group-repeated by the caller."""
+            sde_mask: Optional[jax.Array] = None, *,
+            sde_mode: str = "mixed", remat: str = "none") -> Trajectory:
+    """cond: (B, Lc, cond_dim) — already group-repeated by the caller.
+
+    ``sde_mode`` statically specializes the scan body when the caller
+    *knows* the mask (perf dead-branch elimination, ``repro.perf``):
+    ``"mixed"`` is the general path — every step computes both the SDE and
+    ODE update and selects by ``sde_mask``; ``"all_sde"`` drops the dead
+    ODE branch (Flow-GRPO/Guard, whose mask is statically all-ones);
+    ``"all_ode"`` drops the SDE branch, the per-step noise draws AND the
+    dead log-density (NFT/AWM — their logps are identically zero).  Both
+    specializations produce exactly the values the mixed path selects.
+
+    ``remat`` ("none" | "scan" | "block", ``PerfConfig.remat``) wraps the
+    scan body in ``jax.checkpoint``; "block" additionally threads the
+    backbone's per-layer remat through ``adapter.velocity``."""
+    if sde_mode not in SDE_MODES:
+        raise ValueError(f"sde_mode must be one of {SDE_MODES}, "
+                         f"got {sde_mode!r}")
     B = cond.shape[0]
     ts = scheduler.timesteps(num_steps)
     if sde_mask is None:
         sde_mask = jnp.ones((num_steps,), bool)
+    block = remat == "block"
 
     k_init, k_steps = jax.random.split(key)
     x_init = adapter.init_latent(k_init, B)
+    # hoisted out of the body: the (T, B) per-step timestep batch is scan
+    # input instead of a per-iteration broadcast materialized in the body
+    tbs = jnp.broadcast_to(ts[:-1, None], (num_steps, B)).astype(F32)
 
-    def body(x, inp):
-        t, t_next, is_sde, k = inp
-        tb = jnp.full((B,), t, F32)
-        v = adapter.velocity(params, x, tb, cond)
-        x_sde, logp = scheduler.step(v, x, t, t_next, k)
-        x_ode = scheduler.step_ode(v, x, t, t_next)
-        x_next = jnp.where(is_sde, x_sde, x_ode)
-        logp = jnp.where(is_sde, logp, jnp.zeros_like(logp))
-        return x_next, (x_next, logp)
+    if sde_mode == "all_ode":
+        def body(x, inp):
+            t, t_next, tb = inp
+            v = adapter.velocity(params, x, tb, cond, remat=block)
+            x_next = scheduler.step_ode(v, x, t, t_next)
+            return x_next, (x_next, jnp.zeros((B,), F32))
+        xs_in = (ts[:-1], ts[1:], tbs)
+    elif sde_mode == "all_sde":
+        def body(x, inp):
+            t, t_next, tb, k = inp
+            v = adapter.velocity(params, x, tb, cond, remat=block)
+            x_next, logp = scheduler.step(v, x, t, t_next, k)
+            return x_next, (x_next, logp)
+        xs_in = (ts[:-1], ts[1:], tbs, jax.random.split(k_steps, num_steps))
+    else:
+        def body(x, inp):
+            t, t_next, tb, is_sde, k = inp
+            v = adapter.velocity(params, x, tb, cond, remat=block)
+            x_sde, logp = scheduler.step(v, x, t, t_next, k)
+            x_ode = scheduler.step_ode(v, x, t, t_next)
+            x_next = jnp.where(is_sde, x_sde, x_ode)
+            logp = jnp.where(is_sde, logp, jnp.zeros_like(logp))
+            return x_next, (x_next, logp)
+        xs_in = (ts[:-1], ts[1:], tbs, sde_mask,
+                 jax.random.split(k_steps, num_steps))
 
-    keys = jax.random.split(k_steps, num_steps)
-    _, (xs_tail, logps) = jax.lax.scan(
-        body, x_init, (ts[:-1], ts[1:], sde_mask, keys))
+    body = checkpoint_scan_body(body, remat)
+    _, (xs_tail, logps) = jax.lax.scan(body, x_init, xs_in)
     xs = jnp.concatenate([x_init[None], xs_tail], axis=0)
     return Trajectory(xs=xs, logps=logps, ts=ts, sde_mask=sde_mask, cond=cond)
 
@@ -96,9 +147,11 @@ def rollout_keyed(adapter: FlowAdapter, params, cond: jax.Array,
     # default Gaussian since the element count per key is identical
     x_init = jax.vmap(lambda k: adapter.init_latent(k, 1)[0])(k_init)
 
+    # hoisted out of the body (scan input, not per-iteration broadcast)
+    tbs = jnp.broadcast_to(ts[:-1, None], (num_steps, B)).astype(F32)
+
     def body(x, inp):
-        t, t_next, is_sde, i = inp
-        tb = jnp.full((B,), t, F32)
+        t, t_next, tb, is_sde, i = inp
         v = adapter.velocity(params, x, tb, cond).astype(F32)
         xf = x.astype(F32)
         eps = jax.vmap(lambda k: jax.random.normal(
@@ -116,7 +169,7 @@ def rollout_keyed(adapter: FlowAdapter, params, cond: jax.Array,
         return x_next, (x_next, logp)
 
     _, (xs_tail, logps) = jax.lax.scan(
-        body, x_init, (ts[:-1], ts[1:], sde_mask,
+        body, x_init, (ts[:-1], ts[1:], tbs, sde_mask,
                        jnp.arange(num_steps)))
     xs = jnp.concatenate([x_init[None], xs_tail], axis=0)
     return Trajectory(xs=xs, logps=logps, ts=ts, sde_mask=sde_mask, cond=cond)

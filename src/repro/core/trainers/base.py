@@ -14,9 +14,9 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro import distributed, optim, registry
+from repro import distributed, optim, perf as perf_lib, registry
 from repro.config import (ArchConfig, DistConfig, FlowRLConfig, OptimConfig,
-                          RewardSpec)
+                          PerfConfig, RewardSpec)
 from repro.core import schedulers
 from repro.core.rewards import MultiRewardLoader, compute_advantages
 from repro.core.rollout import Trajectory, group_repeat, rollout
@@ -55,7 +55,8 @@ class BaseTrainer:
     def __init__(self, arch_cfg: ArchConfig, flow_cfg: FlowRLConfig,
                  opt_cfg: OptimConfig, *, key: jax.Array,
                  cond_dim: int = 512, dtype=jnp.bfloat16,
-                 dist: Optional[DistConfig] = None):
+                 dist: Optional[DistConfig] = None,
+                 perf: Optional[PerfConfig] = None):
         if flow_cfg.group_size < 1:
             raise ValueError(
                 f"flow.group_size must be >= 1, got {flow_cfg.group_size}")
@@ -63,6 +64,7 @@ class BaseTrainer:
         self.flow = flow_cfg
         self.opt_cfg = opt_cfg
         self.dist = dist or DistConfig()
+        self.perf = perf_lib.validate(perf or PerfConfig())
         if self.dist.microbatch < 0:
             raise ValueError(
                 f"dist.microbatch must be >= 0, got {self.dist.microbatch}")
@@ -73,7 +75,19 @@ class BaseTrainer:
                 "accumulation would make them chunk-local and change the "
                 "training math — set dist.microbatch=0")
         self.mesh = distributed.data_mesh(self.dist)
-        self.adapter = FlowAdapter(arch_cfg, flow_cfg, cond_dim)
+        self.adapter = FlowAdapter(
+            arch_cfg, flow_cfg, cond_dim,
+            policy_dtype=perf_lib.resolve_policy_dtype(self.perf))
+        # static SDE-branch knowledge for the rollout's dead-branch
+        # specialization: pure-ODE trainers (NFT/AWM) never take the SDE
+        # branch, trainers that keep the base all-stochastic mask never take
+        # the ODE one; only a dynamic mask (MixGRPO) pays for both
+        if not self.rollout_sde:
+            self.sde_mode = "all_ode"
+        elif type(self).sde_mask is BaseTrainer.sde_mask:
+            self.sde_mode = "all_sde"
+        else:
+            self.sde_mode = "mixed"
         sde_type = flow_cfg.sde_type if self.rollout_sde else "ode"
         self.scheduler = schedulers.build(sde_type, flow_cfg.eta)
         k_p, k_r = jax.random.split(key)
@@ -93,6 +107,8 @@ class BaseTrainer:
             donate=self.dist.donate_state and self.donate_state_ok)
         self._rewards_jit = distributed.jit_rewards(functools.partial(
             self._rewards, group_size=flow_cfg.group_size), self.mesh)
+        self._fused_jit = (perf_lib.make_fused_step(self)
+                           if self.perf.fuse_step else None)
 
     # ------------------------------------------------------------- sampling
     def attach_engine(self, engine) -> None:
@@ -108,6 +124,12 @@ class BaseTrainer:
         than the one sampled under — silently wrong ratios — so the
         components are validated here, not trusted."""
         if engine is not None:
+            if self.perf.fuse_step:
+                raise ValueError(
+                    "perf.fuse_step and an attached serving engine are "
+                    "mutually exclusive: the engine's bucketed rollout is "
+                    "host-driven and cannot live inside the fused jit — "
+                    "set perf.fuse_step=false or detach the engine")
             if engine.num_steps != self.flow.num_steps:
                 raise ValueError(
                     f"engine.num_steps={engine.num_steps} != trainer "
@@ -129,7 +151,8 @@ class BaseTrainer:
     def _sample(self, params, cond: jax.Array, key: jax.Array,
                 sde_mask) -> Trajectory:
         return rollout(self.adapter, params, cond, key, self.scheduler,
-                       self.flow.num_steps, sde_mask)
+                       self.flow.num_steps, sde_mask,
+                       sde_mode=self.sde_mode, remat=self.perf.remat)
 
     def sample(self, params, cond: jax.Array, key: jax.Array, it: int = 0
                ) -> Trajectory:
@@ -148,11 +171,22 @@ class BaseTrainer:
 
     # -------------------------------------------------------------- rewards
     def _rewards(self, x0: jax.Array, cond_meta: Dict, *, group_size: int
-                 ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+                 ) -> Tuple[Dict[str, jax.Array], jax.Array,
+                            Dict[str, jax.Array]]:
+        """Returns (raw rewards, advantages, reward stats) — the stats (the
+        weight_map-weighted ``reward_mean`` the optimizer ascends plus the
+        per-reward means) are computed ON DEVICE here, inside the
+        rewards/fused jit, so ``step`` never dispatches per-metric eager
+        reductions."""
         rew = self.loader.compute_all(x0, cond_meta, group_size=group_size)
         adv = compute_advantages(self.flow.advantage_agg, rew,
                                  self.loader.weight_map(), group_size)
-        return rew, adv
+        weights = self.loader.weight_map()
+        stats = {f"reward/{name}": r.astype(F32).mean()
+                 for name, r in rew.items()}
+        stats["reward_mean"] = sum(weights[name] * stats[f"reward/{name}"]
+                                   for name in rew)
+        return rew, adv, stats
 
     # --------------------------------------------------------------- update
     def loss_fn(self, params, traj: Trajectory, adv: jax.Array,
@@ -194,26 +228,48 @@ class BaseTrainer:
         """One full RL iteration: rollout -> rewards -> advantages -> update.
 
         cond: (P, Lc, cond_dim) prompt embeddings (from the preprocessing
-        cache or a live encoder — the trainer doesn't know which: §2.2)."""
+        cache or a live encoder — the trainer doesn't know which: §2.2).
+
+        Returns a flat dict of DEVICE scalars (including the weighted
+        ``reward_mean`` matching the advantage aggregation — EarlyStop and
+        the JSON log track the same objective the optimizer ascends);
+        callers fetch them with one ``jax.device_get``, not one transfer
+        per metric.  With ``perf.fuse_step`` the whole iteration is a
+        single donated jit (``repro.perf.fused``)."""
+        if self._fused_jit is not None and self._engine is None:
+            cond_g = group_repeat(cond, self.flow.group_size)
+            distributed.check_batch_divisible(cond_g.shape[0], self.mesh,
+                                              self.dist.microbatch)
+            mask = self.sde_mask(it)
+            if mask is None:
+                mask = jnp.ones((self.flow.num_steps,), bool)
+            extras = self.update_extras()
+            self.state, metrics = self._fused_jit(
+                self.state, cond_g, key, jnp.int32(it), mask, extras)
+            return metrics
         k_s, k_u = jax.random.split(jax.random.fold_in(key, it))
         traj = self.sample(self.state.params, cond, k_s, it)
         cond_meta = {"cond": traj.cond}
-        rewards, adv = self._rewards_jit(traj.x0, cond_meta)
+        _, adv, reward_stats = self._rewards_jit(traj.x0, cond_meta)
         extras = self.update_extras()
         self.state, metrics = self._update_jit(self.state, traj, adv, k_u,
                                                extras)
-        # weighted, matching the advantage aggregation — EarlyStop and the
-        # JSON log track the same objective the optimizer ascends
-        weights = self.loader.weight_map()
-        metrics["reward_mean"] = sum(weights[name] * r.mean()
-                                     for name, r in rewards.items())
-        for name, r in rewards.items():
-            metrics[f"reward/{name}"] = r.mean()
+        metrics.update(reward_stats)
         return metrics
 
     # ------------------------------------------------------------- helpers
     def velocity(self, params, x, t, cond):
-        return self.adapter.velocity(params, x, t, cond)
+        # loss-side velocity: block remat threads the backbone's per-layer
+        # checkpointing through the forward the backward will rematerialize
+        return self.adapter.velocity(
+            params, x, t, cond, remat=perf_lib.block_remat(self.perf.remat))
+
+    def memory_stats(self, cond: jax.Array) -> Dict[str, Dict]:
+        """``compiled.memory_analysis()`` byte counts of the jitted update
+        (and the fused step, when enabled) for a (P, Lc, cond_dim) prompt
+        batch — see ``repro.perf.memory``.  AOT introspection only: nothing
+        runs, no live buffer is donated."""
+        return perf_lib.update_memory(self, cond)
 
     def sample_timesteps(self, key: jax.Array, batch: int) -> jax.Array:
         """Timestep sampling strategies for the solver-agnostic algorithms

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import registry
-from repro.core.rollout import Trajectory
+from repro.core.rollout import Trajectory, checkpoint_scan_body
 from repro.core.trainers.base import BaseTrainer
 
 F32 = jnp.float32
@@ -37,8 +37,7 @@ class FlowGRPOTrainer(BaseTrainer):
             is FlowGRPOTrainer.ratio_transform and self.flow.kl_coef == 0.0
 
         def per_step(carry, inp):
-            x_t, x_next, t, t_next, logp_old, is_sde, t_idx = inp
-            tb = jnp.full((B,), t, F32)
+            x_t, x_next, t, t_next, tb, logp_old, is_sde, t_idx = inp
             v = self.velocity(params, x_t, tb, cond)
             logp_new = self.scheduler.logprob(v, x_t, t, t_next, x_next)
             if use_kernel:
@@ -65,10 +64,16 @@ class FlowGRPOTrainer(BaseTrainer):
                      clip_sum + frac_clipped.mean(),
                      n_sde + is_sde.astype(F32)), None)
 
+        # remat: checkpointing the scan body keeps only one timestep's
+        # backbone activations live in the backward (scan-body checkpoint
+        # is bit-exact on XLA:CPU — see repro.perf); the (T, B) timestep
+        # batch is hoisted out of the body as scan input
+        per_step = checkpoint_scan_body(per_step, self.perf.remat)
         t_indices = jnp.arange(T)
+        tbs = jnp.broadcast_to(traj.ts[:-1, None], (T, B)).astype(F32)
         (loss_sum, clip_sum, n_sde), _ = jax.lax.scan(
             per_step, (jnp.zeros((), F32),) * 3,
-            (traj.xs[:-1], traj.xs[1:], traj.ts[:-1], traj.ts[1:],
+            (traj.xs[:-1], traj.xs[1:], traj.ts[:-1], traj.ts[1:], tbs,
              traj.logps, traj.sde_mask, t_indices))
         denom = jnp.maximum(n_sde, 1.0)
         loss = loss_sum / denom

@@ -18,13 +18,15 @@ from repro.distributed.microbatch import (accumulated_value_and_grad,
 from repro.distributed.shard import (make_rollout_keyed_sharded,
                                      make_rollout_sharded, rollout_sharded)
 from repro.distributed.sharding import (batch_sharding, check_batch_divisible,
-                                        jit_rewards, jit_sample, jit_update,
-                                        replicated, traj_shardings)
+                                        jit_fused_step, jit_rewards,
+                                        jit_sample, jit_update, replicated,
+                                        traj_shardings)
 
 __all__ = [
     "DATA_AXIS", "data_mesh", "resolve_data_parallel",
     "accumulated_value_and_grad", "chunk_batch",
     "make_rollout_keyed_sharded", "make_rollout_sharded", "rollout_sharded",
-    "batch_sharding", "check_batch_divisible", "jit_rewards", "jit_sample",
-    "jit_update", "replicated", "traj_shardings",
+    "batch_sharding", "check_batch_divisible", "jit_fused_step",
+    "jit_rewards", "jit_sample", "jit_update", "replicated",
+    "traj_shardings",
 ]

@@ -76,11 +76,32 @@ def jit_sample(fn: Callable, mesh: Optional[Mesh]):
 
 
 def jit_rewards(fn: Callable, mesh: Optional[Mesh]):
-    """``fn(x0, cond_meta) -> (rewards, adv)`` — everything batch-sharded."""
+    """``fn(x0, cond_meta) -> (rewards, adv, stats)`` — batch-major inputs
+    and outputs sharded over the data axis (the stats dict is scalar
+    reductions, replicated by construction)."""
     if mesh is None:
         return jax.jit(fn)
     b0 = batch_sharding(mesh, 0)
     return jax.jit(fn, in_shardings=(b0, b0))
+
+
+def jit_fused_step(fn: Callable, mesh: Optional[Mesh], *,
+                   donate: bool = True):
+    """``fn(state, cond_g, key, it, sde_mask, extras) -> (state, metrics)``
+    — the ``repro.perf`` fused train step: RLState replicated and donated,
+    the group-repeated cond batch sharded over the data axis (the
+    trajectory it becomes inside never crosses a jit boundary, so XLA
+    propagates the batch sharding through rollout → rewards → update and
+    inserts the same grad all-reduce the unfused path gets)."""
+    donate_argnums = (0,) if donate else ()
+    if mesh is None:
+        return jax.jit(fn, donate_argnums=donate_argnums)
+    rep = replicated(mesh)
+    return jax.jit(
+        fn,
+        in_shardings=(rep, batch_sharding(mesh, 0), rep, rep, rep, rep),
+        out_shardings=(rep, rep),
+        donate_argnums=donate_argnums)
 
 
 def jit_update(fn: Callable, mesh: Optional[Mesh], *, donate: bool = True):

@@ -41,6 +41,23 @@ def main(argv=None) -> None:
           f"sde={d['scheduler']['name']}, rewards={d['rewards']}")
     print(f"[train] devices={jax.local_device_count()} data_parallel={dp} "
           f"microbatch={exp.cfg.dist.microbatch or 1}")
+    p = exp.cfg.perf
+    if p != type(p)():
+        print(f"[perf] remat={p.remat} fuse_step={p.fuse_step}"
+              + (f" policy_dtype={p.policy_dtype}" if p.policy_dtype else ""))
+    if p.log_memory:
+        tr = exp.build_trainer()
+        d_cfg = exp.cfg.data
+        cond = jax.ShapeDtypeStruct(
+            (d_cfg.batch_prompts, exp.cond_len, exp.cond_dim),
+            jax.numpy.float32)
+        for name, mem in tr.memory_stats(cond).items():
+            # analysis_dict degrades to {"error": str} on backends without
+            # memory_analysis support — report, don't crash the launch
+            pretty = " ".join(f"{k.replace('_bytes', '')}={v / 1e6:.2f}MB"
+                              if isinstance(v, (int, float)) else f"{k}={v}"
+                              for k, v in mem.items() if v is not None)
+            print(f"[perf] {name} memory_analysis: {pretty}")
     result = exp.train()
     hist = result["history"]
     if hist:

@@ -34,11 +34,15 @@ class FlowAdapter:
     """Velocity-field adapter over a Backbone."""
 
     def __init__(self, cfg: ArchConfig, flow_cfg: FlowRLConfig,
-                 cond_dim: int = 512):
+                 cond_dim: int = 512, policy_dtype=None):
         self.cfg = cfg
         self.flow_cfg = flow_cfg
         self.cond_dim = cond_dim
         self.backbone = Backbone(cfg)
+        # explicit activation compute dtype (PerfConfig.policy_dtype);
+        # None inherits the parameter storage dtype — the historical
+        # behaviour, kept as the bit-identical default
+        self.policy_dtype = policy_dtype
 
     # ------------------------------------------------------------------ spec
     def spec(self) -> Dict:
@@ -56,14 +60,17 @@ class FlowAdapter:
 
     # -------------------------------------------------------------- velocity
     def velocity(self, params: Dict, x_t: jax.Array, t: jax.Array,
-                 cond: jax.Array) -> jax.Array:
+                 cond: jax.Array, *, remat: bool = False) -> jax.Array:
         """x_t: (B, Lt, latent_dim); t: (B,) in [0,1]; cond: (B, Lc, cond_dim).
 
-        Returns v: (B, Lt, latent_dim).
+        Returns v: (B, Lt, latent_dim) — always float32 (the log-prob side
+        of the mixed-precision policy).  ``remat=True`` threads the
+        backbone's per-layer block checkpointing through the forward
+        (``PerfConfig.remat="block"`` — f32-rounding-equal, not exact).
         """
         cfg = self.cfg
         B, Lt, ld = x_t.shape
-        dtype = params["latent_in"].dtype
+        dtype = self.policy_dtype or params["latent_in"].dtype
 
         h_lat = jnp.einsum("bld,de->ble", x_t.astype(dtype),
                            params["latent_in"],
@@ -82,12 +89,12 @@ class FlowAdapter:
             # bidirectional DiT: condition prefix + adaLN time modulation
             x = jnp.concatenate([h_cond, h_lat], axis=1)
             hidden, _, _ = self.backbone.forward_embeds(
-                params["backbone"], x, causal=False, cond=t_emb)
+                params["backbone"], x, causal=False, cond=t_emb, remat=remat)
         else:
             # causal DiT: [cond prefix; time token; latent tokens]
             x = jnp.concatenate([h_cond, t_emb[:, None, :], h_lat], axis=1)
             hidden, _, _ = self.backbone.forward_embeds(
-                params["backbone"], x, causal=True)
+                params["backbone"], x, causal=True, remat=remat)
         h_out = hidden[:, -Lt:]
         v = jnp.einsum("bld,dk->blk", h_out, params["latent_out"],
                        preferred_element_type=F32)

@@ -1,0 +1,53 @@
+"""The fused train step: sample→rewards→advantages→update in ONE jit.
+
+``BaseTrainer.step`` otherwise dispatches three separate jits per
+iteration (sample, rewards, update), paying Python dispatch and jit
+boundary costs — every intermediate (the full stacked trajectory) must be
+materialized as a jit output just to be fed straight back in.  Fusing the
+phases into one donated jit removes those boundaries: XLA sees the whole
+step, dead-code-eliminates trajectory buffers nobody reads (the pure-ODE
+NFT/AWM losses touch only ``x0``, so the (T+1, B, Lt, ld) stack and the
+log-prob buffers vanish entirely), and the step's metrics — including the
+weighted ``reward_mean`` — come back as device scalars in the same
+dispatch.
+
+Numerics: the trajectory is ``stop_gradient``-ed before the loss, exactly
+matching the unfused path where it crosses a jit boundary as data (the
+GRPO estimator treats samples as drawn from the behaviour policy).  The
+fused and unfused steps run the same ops but compile as different
+programs, so they are f32-rounding-equal, not bit-identical
+(tests/test_perf.py asserts the documented tolerances).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro import distributed
+
+
+def make_fused_step(trainer):
+    """Build the fused step for ``trainer``; returns the jitted
+    ``fn(state, cond_g, key, it, sde_mask, extras) -> (state, metrics)``.
+
+    ``cond_g`` is the group-repeated (B, Lc, cond_dim) batch — repetition
+    and the divisibility check stay host-side so the sharded layout
+    matches the unfused entry points.  ``key``/``it`` are the raw loop key
+    and iteration index; the per-iteration fold + split happens on device
+    (``it`` is a traced scalar, so iterating never recompiles)."""
+    group_size = trainer.flow.group_size
+
+    def fused(state, cond_g, key, it, sde_mask, extras):
+        k_s, k_u = jax.random.split(jax.random.fold_in(key, it))
+        traj = trainer._sample(state.params, cond_g, k_s, sde_mask)
+        # samples are data from the behaviour policy: the unfused path gets
+        # this for free at the sample-jit boundary, here it must be explicit
+        # (the rollout is differentiable w.r.t. params otherwise)
+        traj = jax.tree.map(jax.lax.stop_gradient, traj)
+        _, adv, reward_stats = trainer._rewards(
+            traj.x0, {"cond": traj.cond}, group_size=group_size)
+        new_state, metrics = trainer._update(state, traj, adv, k_u, extras)
+        metrics.update(reward_stats)
+        return new_state, metrics
+
+    donate = trainer.dist.donate_state and trainer.donate_state_ok
+    return distributed.jit_fused_step(fused, trainer.mesh, donate=donate)

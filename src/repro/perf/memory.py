@@ -1,0 +1,80 @@
+"""Peak-memory introspection for the train step via XLA's
+``compiled.memory_analysis()``.
+
+The remat policy trades recompute for activation memory; this module makes
+the trade observable without running anything — the update is AOT-lowered
+on ``ShapeDtypeStruct``s and compiled, and the analysis byte counts are
+returned (``temp`` is the interesting one: scratch + activation buffers,
+where the loss backward's per-step residuals live).  Used by
+``BaseTrainer.memory_stats``, the ``perf.log_memory`` launcher line, the
+``benchmarks/train_step.py`` trajectory, and the tests/test_perf.py
+regression that peak temp bytes strictly drop under ``remat="scan"``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rollout import Trajectory
+
+F32 = jnp.float32
+
+_FIELDS = {
+    "temp_bytes": "temp_size_in_bytes",
+    "argument_bytes": "argument_size_in_bytes",
+    "output_bytes": "output_size_in_bytes",
+    "peak_bytes": "peak_memory_in_bytes",
+    "generated_code_bytes": "generated_code_size_in_bytes",
+}
+
+
+def analysis_dict(compiled) -> Dict[str, Optional[int]]:
+    """``memory_analysis()`` as a plain dict (None where the backend does
+    not implement a field — CPU reports temp/argument/output)."""
+    try:
+        mem = compiled.memory_analysis()
+    except Exception as e:                 # backend without analysis support
+        return {"error": str(e)}
+    return {k: getattr(mem, attr, None) for k, attr in _FIELDS.items()}
+
+
+def _struct(tree: Any) -> Any:
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
+        tree)
+
+
+def update_memory(trainer, cond: jax.Array) -> Dict[str, Dict]:
+    """AOT-compile the trainer's jitted update — and, when
+    ``perf.fuse_step`` is on, the fused step — for a ``cond`` prompt batch
+    of shape (P, Lc, cond_dim), and report the analysis byte counts.
+
+    Pure introspection: nothing executes and no live buffer is touched
+    (lowering on structs never donates real state)."""
+    f = trainer.flow
+    P, Lc, D = cond.shape
+    B = P * f.group_size
+    T = f.num_steps
+    traj = Trajectory(
+        xs=jax.ShapeDtypeStruct((T + 1, B, f.latent_tokens, f.latent_dim),
+                                F32),
+        logps=jax.ShapeDtypeStruct((T, B), F32),
+        ts=jax.ShapeDtypeStruct((T + 1,), F32),
+        sde_mask=jax.ShapeDtypeStruct((T,), jnp.bool_),
+        cond=jax.ShapeDtypeStruct((B, Lc, D), F32),
+    )
+    adv = jax.ShapeDtypeStruct((B,), F32)
+    key = _struct(jax.random.PRNGKey(0))
+    state = _struct(trainer.state)
+    extras = _struct(trainer.update_extras())
+    out = {"update": analysis_dict(
+        trainer._update_jit.lower(state, traj, adv, key, extras).compile())}
+    if trainer._fused_jit is not None:
+        cond_g = jax.ShapeDtypeStruct((B, Lc, D), F32)
+        it = jax.ShapeDtypeStruct((), jnp.int32)
+        mask = jax.ShapeDtypeStruct((T,), jnp.bool_)
+        out["fused"] = analysis_dict(trainer._fused_jit.lower(
+            state, cond_g, key, it, mask, extras).compile())
+    return out

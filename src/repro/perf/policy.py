@@ -1,0 +1,47 @@
+"""PerfConfig validation and the remat / dtype policy helpers.
+
+The remat policy has exactly three values because they map onto the three
+distinct exactness classes ``jax.checkpoint`` exhibits on this codebase
+(see the package docstring): no remat, scan-body remat (exact), and
+per-layer block remat inside the backbone (rounding-equal).  The
+scan-body primitive itself is ``core.rollout.checkpoint_scan_body`` —
+core cannot import this package.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import PerfConfig
+
+REMAT_MODES = ("none", "scan", "block")
+
+POLICY_DTYPES = {
+    "": None,                     # inherit the parameter dtype
+    "bfloat16": jnp.bfloat16,
+    "float32": jnp.float32,
+}
+
+
+def validate(perf: PerfConfig) -> PerfConfig:
+    """Fail construction-time on unknown knob values (a typo'd ``--set
+    perf.remat=blocks`` must not silently train without remat)."""
+    if perf.remat not in REMAT_MODES:
+        raise ValueError(
+            f"perf.remat must be one of {REMAT_MODES}, got {perf.remat!r}")
+    if perf.policy_dtype not in POLICY_DTYPES:
+        raise ValueError(
+            f"perf.policy_dtype must be one of "
+            f"{sorted(POLICY_DTYPES)}, got {perf.policy_dtype!r}")
+    return perf
+
+
+def resolve_policy_dtype(perf: PerfConfig):
+    """The activation compute dtype for the velocity field, or ``None`` to
+    inherit the parameter dtype (log-probs/optimizer stay f32 regardless)."""
+    return POLICY_DTYPES[perf.policy_dtype]
+
+
+def block_remat(remat: str) -> bool:
+    """Whether the backbone's per-layer block remat should be threaded
+    through ``FlowAdapter.velocity``."""
+    return remat == "block"

@@ -42,7 +42,7 @@ def test_microbatch_grads_match_full_batch():
     tr = _build()
     cond = jax.random.normal(KEY, (4, 4, 512), jnp.float32)
     traj = tr.sample(tr.state.params, cond, KEY, it=0)
-    _, adv = tr._rewards_jit(traj.x0, {"cond": traj.cond})
+    _, adv, _ = tr._rewards_jit(traj.x0, {"cond": traj.cond})
 
     vg = jax.jit(lambda p, t, a: jax.value_and_grad(
         tr.loss_fn, has_aux=True)(p, t, a, KEY))
