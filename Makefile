@@ -17,15 +17,23 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 DIST_FLAGS := --xla_force_host_platform_device_count=4
 
-.PHONY: verify deps-check test test-interpret test-dist test-serve \
+.PHONY: verify deps-check lint test test-interpret test-dist test-serve \
 	test-perf-dist smoke smoke-dist bench-train
 
-verify: deps-check test test-interpret test-dist test-serve test-perf-dist
+verify: deps-check lint test test-interpret test-dist test-serve \
+	test-perf-dist
 
 # Core modules must import on a bare jax+numpy interpreter: no dacite, and
-# zstandard/msgpack/hypothesis only ever loaded behind soft gates.
+# zstandard/msgpack/hypothesis only ever loaded behind soft gates; the
+# analysis package must import on NO third-party modules at all.
 deps-check:
 	$(PY) scripts/check_deps.py
+
+# jaxlint: stdlib-ast static analysis for this repo's JAX bug classes
+# (R001-R006; see `python -m repro.analysis --catalog`).  Fails on any
+# finding that is neither inline-suppressed nor in .jaxlint-baseline.json.
+lint:
+	$(PY) -m repro.analysis src/repro benchmarks examples
 
 test:
 	$(PY) -m pytest -x -q

@@ -13,7 +13,7 @@ names on the same config.
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.api import Experiment
 from repro.config import DataConfig, FlowRLConfig, RunConfig
@@ -48,7 +48,9 @@ for arch_name in ("flux_dit", "mamba2-370m"):
         jax.block_until_ready(lat)
         dt = time.perf_counter() - t0
         s = engine.stats
-        rms = float(jnp.sqrt((lat ** 2).mean()))
+        # already synced by block_until_ready — compute the report on host
+        # instead of paying a second device round-trip (jaxlint R002)
+        rms = float(np.sqrt((np.asarray(lat) ** 2).mean()))
         print(f"{arch_name:14s} solver={sde:10s} "
               f"{len(prompts)/dt:6.1f} req/s (warmup {warm:4.1f}s)  "
               f"latent_rms={rms:.3f}  buckets={s['buckets']} "

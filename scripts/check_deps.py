@@ -4,9 +4,22 @@ Imports every core module and asserts that nothing outside the declared
 runtime dependency set (jax, numpy, + soft-gated zstandard/msgpack) was
 pulled in.  This is the regression class that once broke collection of the
 entire test suite (``ModuleNotFoundError: No module named 'dacite'``).
+
+Also asserts the stricter contract of ``repro.analysis`` (jaxlint): it
+must import with jax AND numpy blocked — linting is stdlib-``ast`` only
+and must never pay jax's import/device-init cost.
 """
 import importlib
 import sys
+
+ANALYSIS_MODULES = [
+    "repro.analysis",
+    "repro.analysis.core",
+    "repro.analysis.scopes",
+    "repro.analysis.rules",
+    "repro.analysis.baseline",
+    "repro.analysis.cli",
+]
 
 CORE_MODULES = [
     "repro",
@@ -33,9 +46,22 @@ FORBIDDEN = ["dacite", "orbax", "optax", "flax", "hypothesis", "dm_haiku",
 
 
 def main() -> int:
+    failures = []
+    # jaxlint first, on a fully bare interpreter (jax/numpy blocked too) —
+    # must run before anything imports jax for real
+    analysis_forbidden = FORBIDDEN + ["jax", "numpy"]
+    for name in analysis_forbidden:
+        sys.modules[name] = None  # type: ignore[assignment]
+    for mod in ANALYSIS_MODULES:
+        try:
+            importlib.import_module(mod)
+        except Exception as e:  # noqa: BLE001
+            failures.append(f"{mod} (stdlib-only): {type(e).__name__}: {e}")
+    for name in analysis_forbidden:
+        del sys.modules[name]
+
     for name in FORBIDDEN:
         sys.modules[name] = None  # type: ignore[assignment]  # force ImportError
-    failures = []
     for mod in CORE_MODULES:
         try:
             importlib.import_module(mod)
@@ -50,7 +76,8 @@ def main() -> int:
             print(f"  {f}")
         return 1
     print(f"dependency check OK: {len(CORE_MODULES)} core modules import "
-          f"without {FORBIDDEN}")
+          f"without {FORBIDDEN}; {len(ANALYSIS_MODULES)} analysis modules "
+          "import with jax+numpy blocked")
     return 0
 
 

@@ -1,0 +1,49 @@
+"""jaxlint — JAX-aware static analysis for this repo's bug classes.
+
+Run it::
+
+    python -m repro.analysis                  # lint src/repro
+    python -m repro.analysis --catalog        # rule catalog
+    python -m repro.analysis --format json benchmarks examples
+
+Everything here is stdlib-only (``ast``, ``re``, ``json``, ``pathlib``) —
+``scripts/check_deps.py`` asserts that importing this package never pulls
+in jax or numpy, so linting costs milliseconds, not device init.
+
+Why a bespoke linter: generic tools can't know that ``self.ref_params``
+read inside a jitted update is a *frozen constant* (the PR-2 NFT bug) or
+that eight ``float()`` calls per train step are eight device round-trips
+(the PR-5 perf bug).  Those classes are mechanical given two repo-specific
+facts the :class:`~repro.analysis.scopes.ScopeGraph` recovers from source:
+which functions run under a trace (including through the
+``distributed.jit_*`` wrapper layer), and which ``self.<attr>``\\ s each
+class family mutates.
+
+Adding a rule (registry-style, like every other repro component)::
+
+    # src/repro/analysis/rules.py
+    @register_rule
+    class R007MyRule(Rule):
+        id = "R007"                      # unique, R\\d{3}
+        name = "my-rule"                 # kebab-case, shown in reports
+        rationale = "one line: the bug class and why it matters"
+
+        def check(self, module, graph):  # yield Finding objects
+            for fi in graph.module_functions(module):
+                if graph.is_traced(fi) and _looks_wrong(fi):
+                    yield self.finding(module, fi.node, "explain the fix")
+
+That's the whole integration: the driver discovers rules through the
+registry, suppressions (``# jaxlint: disable=R007 — why``) and the
+baseline work immediately, and ``--catalog`` picks up the rationale.
+Add positive + negative fixtures in ``tests/test_analysis.py``.
+"""
+from repro.analysis.core import Finding, Module, Rule, Suppression, \
+    all_rules, register_rule, rule_ids
+from repro.analysis.scopes import ScopeGraph
+
+# rule modules register on import
+from repro.analysis import rules as _rules  # noqa: F401  (side effect)
+
+__all__ = ["Finding", "Module", "Rule", "Suppression", "all_rules",
+           "register_rule", "rule_ids", "ScopeGraph"]

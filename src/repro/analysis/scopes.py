@@ -1,0 +1,555 @@
+"""Traced-scope graph: which functions run under a JAX trace.
+
+The graph answers one question for every function in the linted tree —
+"can this code execute inside ``jax.jit`` / ``lax.scan`` / ``jax.checkpoint``
+/ ``shard_map`` / ``pl.pallas_call`` (or ``vmap``/``grad``)?" — because the
+bug classes the rules encode only exist (R003/R004) or only *don't* exist
+(R002's host syncs) under a trace.
+
+Construction, all stdlib ``ast``:
+
+1. **Index** every function/method/lambda and class across the linted
+   modules (nested defs are first-class nodes; classes record which methods
+   assign which ``self.<attr>`` — R003's mutation map).
+2. **Wrapper positions**: a repo function whose parameter flows directly
+   into a tracing call (``def jit_sample(fn, mesh): return jax.jit(fn,...)``)
+   traces that argument position at every call site — this is how the
+   ``distributed.jit_*`` indirection layer stays visible to the linter.
+3. **Roots**: every function passed to a tracing call / decorator
+   (including ``functools.partial(jax.jit, ...)`` and wrapper call sites).
+4. **Edges**: calls resolved by name — ``self.x`` binds within the class
+   family (base + subclasses, so ``BaseTrainer`` reaching ``self.loss_fn``
+   marks every trainer's override), module aliases bind to the imported
+   module, anything else binds to every *arity-compatible* function of that
+   name.  Deliberately over-approximate: a linter would rather walk into
+   one function too many than miss a traced scope.
+5. **Reachability**: BFS from the roots; ``graph.is_traced(fn)``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import Module
+
+# tracing entry points, keyed by the trailing name of the callee; the value
+# is the positional index of the function being traced
+TRACERS: Dict[str, int] = {
+    "jit": 0, "pjit": 0, "checkpoint": 0, "remat": 0, "scan": 0,
+    "shard_map": 0, "pallas_call": 0, "vmap": 0, "pmap": 0, "grad": 0,
+    "value_and_grad": 0, "custom_jvp": 0, "custom_vjp": 0,
+}
+
+
+def last_name(expr: ast.expr) -> Optional[str]:
+    """Trailing identifier of a Name/Attribute chain (``jax.lax.scan`` ->
+    ``"scan"``)."""
+    if isinstance(expr, ast.Attribute):
+        return expr.attr
+    if isinstance(expr, ast.Name):
+        return expr.id
+    return None
+
+
+def root_name(expr: ast.expr) -> Optional[str]:
+    """Leading identifier of a Name/Attribute chain (``jax.lax.scan`` ->
+    ``"jax"``)."""
+    while isinstance(expr, ast.Attribute):
+        expr = expr.value
+    return expr.id if isinstance(expr, ast.Name) else None
+
+
+def tracer_fn_arg(call: ast.Call) -> Optional[ast.expr]:
+    """The function expression a tracing call traces, or None.
+
+    Handles ``jax.jit(f)``, ``lax.scan(body, ...)``, bare ``shard_map(f)``
+    and ``jax.jit(functools.partial(f, ...))``."""
+    name = last_name(call.func)
+    if name not in TRACERS:
+        return None
+    pos = TRACERS[name]
+    if len(call.args) <= pos:
+        return None
+    arg: ast.expr = call.args[pos]
+    if isinstance(arg, ast.Call) and last_name(arg.func) == "partial" \
+            and arg.args:
+        arg = arg.args[0]
+    return arg
+
+
+def shallow_walk(node: ast.AST) -> Iterator[ast.AST]:
+    """``ast.walk`` that does not descend into nested function/class
+    definitions (they are separate graph nodes)."""
+    stack: List[ast.AST] = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda,
+                          ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+
+
+class FuncInfo:
+    """One function/method/lambda definition."""
+
+    __slots__ = ("node", "module", "name", "qualname", "class_name",
+                 "parent", "is_method", "min_pos", "max_pos", "kw_names",
+                 "has_varkw", "params")
+
+    def __init__(self, node, module: Module, name: str, qualname: str,
+                 class_name: Optional[str], parent: Optional["FuncInfo"]):
+        self.node = node
+        self.module = module
+        self.name = name
+        self.qualname = qualname
+        self.class_name = class_name
+        self.parent = parent
+        a = node.args
+        pos = list(a.posonlyargs) + list(a.args)
+        self.params = [p.arg for p in pos]
+        self.is_method = (class_name is not None and parent is None
+                          and bool(pos) and pos[0].arg in ("self", "cls"))
+        n_self = 1 if self.is_method else 0
+        self.min_pos = max(0, len(pos) - len(a.defaults) - n_self)
+        self.max_pos = None if a.vararg else len(pos) - n_self
+        self.kw_names = {p.arg for p in pos[n_self:]} | \
+                        {p.arg for p in a.kwonlyargs}
+        self.has_varkw = a.kwarg is not None
+
+    def accepts(self, npos: int, kwnames: Set[str], lenient: bool) -> bool:
+        """Could a call with ``npos`` positional args + ``kwnames`` bind?"""
+        if lenient:
+            return True
+        if self.max_pos is not None and npos > self.max_pos:
+            return False
+        if not self.has_varkw and not (kwnames <= self.kw_names):
+            return False
+        if npos + len(kwnames) < self.min_pos:
+            return False
+        return True
+
+    def __repr__(self):
+        return f"<FuncInfo {self.module.rel}:{self.qualname}>"
+
+
+class ClassInfo:
+    __slots__ = ("node", "module", "name", "bases", "methods",
+                 "attr_writers")
+
+    def __init__(self, node: ast.ClassDef, module: Module):
+        self.node = node
+        self.module = module
+        self.name = node.name
+        self.bases = [last_name(b) for b in node.bases
+                      if last_name(b) is not None]
+        self.methods: Dict[str, FuncInfo] = {}
+        # attr -> {method names that assign self.attr}
+        self.attr_writers: Dict[str, Set[str]] = {}
+
+
+class ScopeGraph:
+    def __init__(self, modules: Sequence[Module]):
+        self.modules = list(modules)
+        self.functions: Dict[int, FuncInfo] = {}        # id(node) -> info
+        self.by_name: Dict[str, List[FuncInfo]] = {}
+        self.classes: Dict[str, List[ClassInfo]] = {}   # name -> defs
+        self.module_by_dotted: Dict[str, Module] = {}
+        self.imports: Dict[str, Dict[str, str]] = {}    # rel -> alias->dotted
+        self.module_funcs: Dict[str, Dict[str, FuncInfo]] = {}
+        # wrapper name -> positions whose argument gets traced
+        self.wrapper_positions: Dict[int, Set[int]] = {}
+        # wrapper funcs whose internal jit passes donate_argnums
+        self.wrapper_donates: Dict[int, Set[int]] = {}
+        self.edges: Dict[int, Set[int]] = {}
+        self.roots: Set[int] = set()
+        self.traced: Set[int] = set()
+        self._family_cache: Dict[str, Set[str]] = {}
+        self._bound_cache: Dict[int, Set[str]] = {}
+        self._nested_cache: Dict[int, Dict[str, FuncInfo]] = {}
+        self._resolve_memo: Dict[int, List[FuncInfo]] = {}
+
+        for mod in self.modules:
+            self.module_by_dotted[mod.dotted] = mod
+            self._index_module(mod)
+        self._find_wrappers()
+        for mod in self.modules:
+            self._roots_and_edges(mod)
+        self._bfs()
+
+    # ------------------------------------------------------------- indexing
+    def _index_module(self, mod: Module) -> None:
+        imports: Dict[str, str] = {}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    imports[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    imports[a.asname or a.name] = f"{node.module}.{a.name}"
+        self.imports[mod.rel] = imports
+        self.module_funcs[mod.rel] = {}
+
+        def visit(node, cls: Optional[ClassInfo], fn: Optional[FuncInfo],
+                  qual: str):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.ClassDef):
+                    ci = ClassInfo(child, mod)
+                    self.classes.setdefault(ci.name, []).append(ci)
+                    visit(child, ci, None, f"{qual}{child.name}.")
+                elif isinstance(child, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                    fi = FuncInfo(child, mod, child.name,
+                                  f"{qual}{child.name}",
+                                  cls.name if cls else
+                                  (fn.class_name if fn else None), fn)
+                    self._add_func(fi, mod, cls, fn)
+                    visit(child, None, fi, f"{qual}{child.name}.")
+                elif isinstance(child, ast.Lambda):
+                    fi = FuncInfo(child, mod, "<lambda>",
+                                  f"{qual}<lambda>",
+                                  fn.class_name if fn else
+                                  (cls.name if cls else None), fn)
+                    self.functions[id(child)] = fi
+                    visit(child, None, fi, f"{qual}<lambda>.")
+                else:
+                    visit(child, cls, fn, qual)
+
+        visit(mod.tree, None, None, "")
+
+        # self.<attr> mutation map, per class
+        for cis in self.classes.values():
+            for ci in cis:
+                if ci.module is not mod:
+                    continue
+                for mname, mi in ci.methods.items():
+                    for n in ast.walk(mi.node):
+                        tgt = None
+                        if isinstance(n, (ast.Assign, ast.AugAssign,
+                                          ast.AnnAssign)):
+                            tgts = (n.targets if isinstance(n, ast.Assign)
+                                    else [n.target])
+                            for t in tgts:
+                                for e in ast.walk(t):
+                                    if (isinstance(e, ast.Attribute)
+                                            and isinstance(e.value, ast.Name)
+                                            and e.value.id == "self"):
+                                        tgt = e.attr
+                                        ci.attr_writers.setdefault(
+                                            tgt, set()).add(mname)
+
+    def _add_func(self, fi: FuncInfo, mod: Module, cls: Optional[ClassInfo],
+                  parent: Optional[FuncInfo]) -> None:
+        self.functions[id(fi.node)] = fi
+        self.by_name.setdefault(fi.name, []).append(fi)
+        if cls is not None and parent is None:
+            cls.methods[fi.name] = fi
+        if cls is None and parent is None:
+            self.module_funcs[mod.rel][fi.name] = fi
+
+    # ------------------------------------------------------------- wrappers
+    def _find_wrappers(self) -> None:
+        """Functions whose parameter flows into a tracing call: calling
+        them traces that argument (the ``distributed.jit_*`` layer)."""
+        for fi in list(self.functions.values()):
+            if not isinstance(fi.node, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                continue
+            params = fi.params[1:] if fi.is_method else fi.params
+            for n in shallow_walk(fi.node):
+                if not isinstance(n, ast.Call):
+                    continue
+                arg = tracer_fn_arg(n)
+                if isinstance(arg, ast.Name) and arg.id in params:
+                    idx = params.index(arg.id)
+                    self.wrapper_positions.setdefault(id(fi.node),
+                                                      set()).add(idx)
+                    if (last_name(n.func) in ("jit", "pjit") and any(
+                            kw.arg == "donate_argnums" for kw in n.keywords)):
+                        self.wrapper_donates.setdefault(
+                            id(fi.node), set()).update(
+                            _donated_positions(n))
+
+    # ------------------------------------------------------ class families
+    def family(self, class_name: str) -> Set[str]:
+        """Names connected to ``class_name`` through base-class edges (both
+        directions): a base reaching ``self.x`` may bind any subclass
+        override and vice versa."""
+        if class_name in self._family_cache:
+            return self._family_cache[class_name]
+        # build undirected adjacency lazily over all classes
+        adj: Dict[str, Set[str]] = {}
+        for name, cis in self.classes.items():
+            adj.setdefault(name, set())
+            for ci in cis:
+                for b in ci.bases:
+                    if b in self.classes:
+                        adj[name].add(b)
+                        adj.setdefault(b, set()).add(name)
+        seen = {class_name}
+        frontier = [class_name]
+        while frontier:
+            cur = frontier.pop()
+            for nxt in adj.get(cur, ()):
+                if nxt not in seen:
+                    seen.add(nxt)
+                    frontier.append(nxt)
+        self._family_cache[class_name] = seen
+        return seen
+
+    def family_methods(self, class_name: str, method: str) -> List[FuncInfo]:
+        out = []
+        for cname in self.family(class_name):
+            for ci in self.classes.get(cname, []):
+                if method in ci.methods:
+                    out.append(ci.methods[method])
+        return out
+
+    def family_attr_writers(self, class_name: str, attr: str) -> Set[str]:
+        out: Set[str] = set()
+        for cname in self.family(class_name):
+            for ci in self.classes.get(cname, []):
+                out |= ci.attr_writers.get(attr, set())
+        return out
+
+    # ----------------------------------------------------------- resolution
+    def resolve_callable(self, expr: ast.expr, mod: Module,
+                         encl: Optional[FuncInfo]) -> List[FuncInfo]:
+        """Function definitions a function-valued expression may denote."""
+        if isinstance(expr, ast.Lambda):
+            fi = self.functions.get(id(expr))
+            return [fi] if fi else []
+        if isinstance(expr, ast.Name):
+            # enclosing nested defs, then module level, then global
+            f = encl
+            while f is not None:
+                hit = self._nested_defs(f).get(expr.id)
+                if hit is not None:
+                    return [hit]
+                # a plain local binding (param / assignment) shadows
+                # everything: the value is a runtime object the linter
+                # can't name — resolving it globally would be noise
+                if expr.id in self._bound_names(f):
+                    return []
+                f = f.parent
+            if expr.id in self.module_funcs.get(mod.rel, {}):
+                return [self.module_funcs[mod.rel][expr.id]]
+            dotted = self.imports.get(mod.rel, {}).get(expr.id)
+            if dotted:
+                hit = self._resolve_dotted(dotted)
+                if hit:
+                    return hit
+            if expr.id in self._module_assigned(mod):
+                return []
+            return self.by_name.get(expr.id, [])
+        if isinstance(expr, ast.Attribute):
+            name = expr.attr
+            recv = expr.value
+            if isinstance(recv, ast.Name) and recv.id in ("self", "cls"):
+                cls_name = _enclosing_class(encl)
+                if cls_name:
+                    hits = self.family_methods(cls_name, name)
+                    if hits:
+                        return hits
+                return [fi for fi in self.by_name.get(name, [])
+                        if fi.is_method]
+            if isinstance(recv, ast.Name):
+                alias = self.imports.get(mod.rel, {}).get(recv.id)
+                if alias and alias in self.module_by_dotted:
+                    target = self.module_by_dotted[alias]
+                    hit = self.module_funcs.get(target.rel, {}).get(name)
+                    if hit:
+                        return [hit]
+            # `<recv>.get(...)` etc. is almost always a container op, not
+            # a repo method — the global fallback would wire dict lookups
+            # in traced code to every class that happens to define `get`
+            if name in _CONTAINER_PROTOCOL:
+                return []
+            return self.by_name.get(name, [])
+        return []
+
+    def _resolve_dotted(self, dotted: str) -> List[FuncInfo]:
+        if dotted in self.module_by_dotted:
+            return []
+        mod_path, _, sym = dotted.rpartition(".")
+        target = self.module_by_dotted.get(mod_path)
+        if target:
+            hit = self.module_funcs.get(target.rel, {}).get(sym)
+            if hit:
+                return [hit]
+        return []
+
+    def resolve_call(self, call: ast.Call, mod: Module,
+                     encl: Optional[FuncInfo]) -> List[FuncInfo]:
+        """Call targets, arity-filtered (a 5-arg ``scheduler.step(...)``
+        never binds a 2-arg ``Trainer.step``).  Memoized per call node —
+        several rules resolve the same calls."""
+        memo = self._resolve_memo.get(id(call))
+        if memo is not None:
+            return memo
+        cands = self.resolve_callable(call.func, mod, encl)
+        lenient = (any(isinstance(a, ast.Starred) for a in call.args)
+                   or any(kw.arg is None for kw in call.keywords))
+        npos = len(call.args)
+        kwnames = {kw.arg for kw in call.keywords if kw.arg}
+        out = [fi for fi in cands if fi.accepts(npos, kwnames, lenient)]
+        self._resolve_memo[id(call)] = out
+        return out
+
+    # -------------------------------------------------------- roots + edges
+    def _roots_and_edges(self, mod: Module) -> None:
+        def handle_body(owner: Optional[FuncInfo], body_owner_node):
+            for n in shallow_walk(body_owner_node):
+                if not isinstance(n, ast.Call):
+                    continue
+                # (a) direct tracing call
+                arg = tracer_fn_arg(n)
+                if arg is not None:
+                    for fi in self.resolve_callable(arg, mod, owner):
+                        self.roots.add(id(fi.node))
+                # (b) wrapper call site
+                for fi in self.resolve_call(n, mod, owner):
+                    positions = self.wrapper_positions.get(id(fi.node))
+                    if positions:
+                        for idx in positions:
+                            if idx < len(n.args):
+                                for tfi in self.resolve_callable(
+                                        n.args[idx], mod, owner):
+                                    self.roots.add(id(tfi.node))
+                # (c) plain call edge
+                if owner is not None:
+                    tgts = self.resolve_call(n, mod, owner)
+                    if tgts:
+                        self.edges.setdefault(id(owner.node), set()).update(
+                            id(t.node) for t in tgts)
+
+        for fid, fi in self.functions.items():
+            if fi.module is not mod:
+                continue
+            # traced decorators
+            node = fi.node
+            for dec in getattr(node, "decorator_list", []):
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                tl = last_name(target)
+                if tl in TRACERS:
+                    self.roots.add(fid)
+                elif tl == "partial" and isinstance(dec, ast.Call) \
+                        and dec.args and last_name(dec.args[0]) in TRACERS:
+                    self.roots.add(fid)
+            handle_body(fi, node)
+        handle_body(None, mod.tree)       # module-level tracing calls
+
+    def _bfs(self) -> None:
+        frontier = list(self.roots)
+        self.traced = set(self.roots)
+        while frontier:
+            cur = frontier.pop()
+            for nxt in self.edges.get(cur, ()):
+                if nxt not in self.traced:
+                    self.traced.add(nxt)
+                    frontier.append(nxt)
+
+    def _nested_defs(self, fi: FuncInfo) -> Dict[str, FuncInfo]:
+        cached = self._nested_cache.get(id(fi.node))
+        if cached is None:
+            cached = {
+                n.name: self.functions[id(n)]
+                for n in shallow_walk(fi.node)
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+            self._nested_cache[id(fi.node)] = cached
+        return cached
+
+    def _bound_names(self, fi: FuncInfo) -> Set[str]:
+        """Names bound inside ``fi`` by parameters or plain statements
+        (assignments, for/with/except targets) — NOT nested defs."""
+        cached = self._bound_cache.get(id(fi.node))
+        if cached is not None:
+            return cached
+        node = fi.node
+        a = node.args
+        names: Set[str] = set(fi.params)
+        names.update(p.arg for p in a.kwonlyargs)
+        if a.vararg:
+            names.add(a.vararg.arg)
+        if a.kwarg:
+            names.add(a.kwarg.arg)
+        names |= _stmt_bound_names(node)
+        self._bound_cache[id(fi.node)] = names
+        return names
+
+    def _module_assigned(self, mod: Module) -> Set[str]:
+        cached = self._bound_cache.get(id(mod.tree))
+        if cached is not None:
+            return cached
+        names = _stmt_bound_names(mod.tree)
+        self._bound_cache[id(mod.tree)] = names
+        return names
+
+    # ------------------------------------------------------------- queries
+    def is_traced(self, fi: FuncInfo) -> bool:
+        return id(fi.node) in self.traced
+
+    def module_functions(self, mod: Module) -> List[FuncInfo]:
+        return [fi for fi in self.functions.values() if fi.module is mod]
+
+
+# attribute names resolved only against self/cls or module aliases, never
+# through the global by-name fallback (dict/list/set protocol)
+_CONTAINER_PROTOCOL = {
+    "get", "items", "keys", "values", "pop", "popitem", "setdefault",
+    "update", "append", "extend", "insert", "remove", "add", "discard",
+    "clear", "copy", "index", "count", "sort", "reverse", "join",
+    "move_to_end",
+}
+
+
+def _stmt_bound_names(node: ast.AST) -> Set[str]:
+    names: Set[str] = set()
+
+    def targets(t: ast.expr) -> Iterator[str]:
+        for e in ast.walk(t):
+            if isinstance(e, ast.Name) and isinstance(e.ctx, ast.Store):
+                yield e.id
+
+    for n in shallow_walk(node):
+        if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            for t in (n.targets if isinstance(n, ast.Assign)
+                      else [n.target]):
+                names.update(targets(t))
+        elif isinstance(n, (ast.For, ast.AsyncFor)):
+            names.update(targets(n.target))
+        elif isinstance(n, ast.comprehension):
+            names.update(targets(n.target))
+        elif isinstance(n, ast.withitem) and n.optional_vars is not None:
+            names.update(targets(n.optional_vars))
+        elif isinstance(n, ast.ExceptHandler) and n.name:
+            names.add(n.name)
+        elif isinstance(n, ast.NamedExpr):
+            names.update(targets(n.target))
+    return names
+
+
+def _enclosing_class(fi: Optional[FuncInfo]) -> Optional[str]:
+    while fi is not None:
+        if fi.class_name:
+            return fi.class_name
+        fi = fi.parent
+    return None
+
+
+def _donated_positions(jit_call: ast.Call) -> Set[int]:
+    """Literal donate_argnums positions, or {0} when the value is computed
+    (the repo convention donates the leading state buffer)."""
+    for kw in jit_call.keywords:
+        if kw.arg == "donate_argnums":
+            v = kw.value
+            if isinstance(v, ast.Tuple):
+                out = {e.value for e in v.elts
+                       if isinstance(e, ast.Constant)
+                       and isinstance(e.value, int)}
+                if out:
+                    return out
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return {v.value}
+            return {0}
+    return set()

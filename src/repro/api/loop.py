@@ -176,19 +176,22 @@ class TrainLoop:
             # ONE host transfer for the whole metric dict — the trainer
             # returns device scalars (reward_mean included, computed inside
             # the rewards/fused jit); fetching per-metric with float() cost
-            # ~8 separate syncs per step
-            m = jax.device_get(self.trainer.step(cond, self.key, it=it))
+            # ~8 separate syncs per step.  Converting at the transfer site
+            # keeps the loop body sync-free (jaxlint R002).
+            m = jax.tree.map(
+                float, jax.device_get(
+                    self.trainer.step(cond, self.key, it=it)))
             row: Dict[str, Any] = {
                 "step": it,
-                "reward": float(m["reward_mean"]),
-                "loss": float(m["loss"]),
-                "grad_norm": float(m["grad_norm"]),
+                "reward": m["reward_mean"],
+                "loss": m["loss"],
+                "grad_norm": m["grad_norm"],
                 "encode_resident": self.provider.encoder_resident,
                 "dt": round(time.time() - t_it, 3),
             }
             for k, v in m.items():
                 if k.startswith("reward/"):
-                    row[k] = float(v)
+                    row[k] = v
             self.history.append(row)
             for cb in self.callbacks:
                 cb.on_step(self, it, row)

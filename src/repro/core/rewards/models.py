@@ -54,6 +54,9 @@ class PickScoreStub(PointwiseRewardModel):
     def score(self, x0, cond_meta):
         pooled_c = cond_meta["cond"].astype(F32).mean(axis=1)  # (B, cond_dim)
         h = jnp.concatenate([_pool(x0), pooled_c], axis=-1)
+        # jaxlint: disable=R003 — frozen scorer: the loader set_params()s
+        # once before the first jitted call and never after (hot-swapping
+        # rewards rebuilds the trainer)
         p = self.params
         h = jnp.tanh(h @ p["w1"])
         h = jnp.tanh(h @ p["w2"])
@@ -83,6 +86,8 @@ class TextRenderReward(PointwiseRewardModel):
     def score(self, x0, cond_meta):
         B = x0.shape[0]
         pooled_c = cond_meta["cond"].astype(F32).mean(axis=1)
+        # jaxlint: disable=R003 — frozen scorer: params are set once by the
+        # loader before the first jitted call (see PickScoreStub.score)
         target = (pooled_c @ self.params["proj"]).reshape(x0.shape)
         a = x0.astype(F32).reshape(B, -1)
         b = target.reshape(B, -1)

@@ -57,6 +57,9 @@ class DiffusionNFTTrainer(BaseTrainer):
                 key: jax.Array, ref_params=None
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
         if ref_params is None:        # direct (un-jitted) calls, e.g. tests
+            # jaxlint: disable=R003 — fallback for un-jitted direct calls
+            # only; the jitted path threads ref_params through
+            # update_extras() as a real argument (the PR-2 fix)
             ref_params = self.ref_params
         x0 = traj.x0
         cond = traj.cond
