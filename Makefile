@@ -12,16 +12,19 @@
 #                      gradient-accumulation microbatching
 #   make test-serve  - serving engine suite on 4 faked devices + the
 #                      sharded serve CLI end-to-end
+#   make fuzz-serve  - 200 seeded submit/poll/fetch/drain interleavings
+#                      against one warmed multi-tenant engine (deterministic:
+#                      injected clock, seeded RNG, zero invariant violations)
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 DIST_FLAGS := --xla_force_host_platform_device_count=4
 
 .PHONY: verify deps-check lint test test-interpret test-dist test-serve \
-	test-perf-dist smoke smoke-dist bench-train
+	test-perf-dist fuzz-serve smoke smoke-dist bench-train
 
 verify: deps-check lint test test-interpret test-dist test-serve \
-	test-perf-dist
+	test-perf-dist fuzz-serve
 
 # Core modules must import on a bare jax+numpy interpreter: no dacite, and
 # zstandard/msgpack/hypothesis only ever loaded behind soft gates; the
@@ -64,8 +67,19 @@ test-serve:
 	    -k "not subprocess"
 	XLA_FLAGS="$(DIST_FLAGS)" $(PY) -m repro.launch.serve --reduced \
 	    --requests 9 --max-batch 4 --deadline-ms 2 \
+	    --step-tiers 2 --stats-json /tmp/repro-serve-stats.json \
 	    --set flow.num_steps=2 --set dist.data_parallel=4 \
 	    --set 'data.encoder={"cond_dim": 512, "cond_len": 8, "vocab": 512, "hidden": 64}'
+	$(PY) -c "import json; s = json.load(open('/tmp/repro-serve-stats.json')); \
+	    assert s['cold_dispatches'] == 0 and s['step_tiers'] == [2], s"
+
+# The serving fuzz corpus at full depth: 200 seeded interleavings (the
+# tier-1 run uses the default 25).  Deterministic — same seeds, same
+# injected clock, same op sequences — so a failure here is reproducible
+# with REPRO_FUZZ_SEEDS=200 pytest tests/test_serving.py -k fuzz.
+fuzz-serve:
+	REPRO_FUZZ_SEEDS=200 $(PY) -m pytest -x -q tests/test_serving.py \
+	    -k "fuzz"
 
 # repro.perf composition: the perf tests whose remat/fusion × data-parallel
 # × microbatch assertions need real (faked) devices re-run ON 4 of them

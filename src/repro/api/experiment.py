@@ -202,13 +202,17 @@ class Experiment:
     def build_sampler(self, key: Optional[jax.Array] = None,
                       max_batch: int = 8, params=None,
                       buckets: Optional[Sequence[int]] = None,
-                      deadline_s: float = 0.005,
+                      step_tiers: Optional[Sequence[int]] = None,
+                      deadline_s: float = 0.005, admission=None,
+                      max_inflight: int = 4,
                       provider=None) -> FlowSampler:
         """``params`` priority: explicit argument > this Experiment's
         trained state (if ``train()`` ran) > fresh init.  The sampler's
         engine shards inference over ``cfg.dist`` (``data_parallel>1``
         builds the "data" mesh; per-request output is bit-identical to
-        single-device)."""
+        single-device).  ``step_tiers`` is the admitted num_steps quality
+        ladder; ``admission`` an :class:`repro.serving.AdmissionConfig`
+        (priority classes, tenant weights, bounded queues)."""
         from repro import distributed
         key = jax.random.PRNGKey(self.cfg.seed) if key is None else key
         if params is None and self._trainer is not None:
@@ -216,7 +220,8 @@ class Experiment:
         return FlowSampler(self.arch, self.flow, key=key,
                            max_batch=max_batch, cond_dim=self.cond_dim,
                            params=params, buckets=buckets,
-                           deadline_s=deadline_s,
+                           step_tiers=step_tiers, deadline_s=deadline_s,
+                           admission=admission, max_inflight=max_inflight,
                            mesh=distributed.data_mesh(self.cfg.dist),
                            provider=provider, cond_len=self.cond_len)
 
@@ -359,13 +364,20 @@ class Experiment:
     def build_engine(self, key: Optional[jax.Array] = None,
                      max_batch: int = 8, params=None,
                      buckets: Optional[Sequence[int]] = None,
-                     deadline_s: float = 0.005):
+                     step_tiers: Optional[Sequence[int]] = None,
+                     deadline_s: float = 0.005, admission=None,
+                     max_inflight: int = 4):
         """The serving engine directly (``repro.serving.ServingEngine``):
-        submit/poll/drain request-queue API, warmup, stats.  Prompts are
-        encoded live through the engine's LRU cond cache — repeat prompts
-        skip the ConditionProvider."""
+        submit/poll/drain request-queue API with priority classes,
+        per-request SLO deadlines and admission control, warmup, and a
+        JSON-serializable stats snapshot.  Prompts are encoded live
+        through the engine's LRU cond cache — repeat prompts skip the
+        ConditionProvider."""
         sampler = self.build_sampler(key, max_batch=max_batch, params=params,
-                                     buckets=buckets, deadline_s=deadline_s,
+                                     buckets=buckets, step_tiers=step_tiers,
+                                     deadline_s=deadline_s,
+                                     admission=admission,
+                                     max_inflight=max_inflight,
                                      provider=self.build_provider(live=True))
         return sampler.engine
 

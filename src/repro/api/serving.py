@@ -27,7 +27,9 @@ class FlowSampler:
     def __init__(self, arch_cfg, flow_cfg, *, key, max_batch: int = 8,
                  cond_dim: int = 512, params=None,
                  buckets: Optional[Sequence[int]] = None,
-                 deadline_s: float = 0.005, mesh=None, provider=None,
+                 step_tiers: Optional[Sequence[int]] = None,
+                 deadline_s: float = 0.005, admission=None,
+                 max_inflight: int = 4, mesh=None, provider=None,
                  cond_len: int = 16):
         self.adapter = FlowAdapter(arch_cfg, flow_cfg, cond_dim)
         self.scheduler = schedulers.build(flow_cfg.sde_type, flow_cfg.eta)
@@ -38,7 +40,8 @@ class FlowSampler:
         self.engine = ServingEngine(
             self.adapter, self.scheduler, self.params,
             num_steps=flow_cfg.num_steps, max_batch=max_batch,
-            buckets=buckets, deadline_s=deadline_s, mesh=mesh,
+            buckets=buckets, step_tiers=step_tiers, deadline_s=deadline_s,
+            admission=admission, max_inflight=max_inflight, mesh=mesh,
             provider=provider, cond_len=cond_len)
 
     def warmup(self) -> dict:

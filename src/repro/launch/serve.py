@@ -18,6 +18,7 @@ from the serve timing.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -43,6 +44,12 @@ def main(argv=None) -> None:
                          "(default: powers of two up to --max-batch)")
     ap.add_argument("--deadline-ms", type=float, default=5.0,
                     help="max wait before a partial bucket is flushed")
+    ap.add_argument("--step-tiers", default="", metavar="S1,S2,...",
+                    help="admitted num_steps quality tiers (warmed and "
+                         "enforced at submit; default: flow.num_steps only)")
+    ap.add_argument("--stats-json", default="", metavar="PATH",
+                    help="write the engine's JSON stats/health snapshot "
+                         "to PATH after serving ('-' prints to stdout)")
     args = ap.parse_args(argv)
     if args.requests < 1:
         ap.error("--requests must be >= 1")
@@ -55,12 +62,20 @@ def main(argv=None) -> None:
             raise ValueError(f"bucket sizes must be >= 1, got {buckets}")
     except ValueError as e:
         ap.error(f"--bucket: {e}")
+    try:
+        step_tiers = ([int(s) for s in args.step_tiers.split(",") if s]
+                      if args.step_tiers else None)
+        if step_tiers and any(s < 1 for s in step_tiers):
+            raise ValueError(f"step tiers must be >= 1, got {step_tiers}")
+    except ValueError as e:
+        ap.error(f"--step-tiers: {e}")
     exp = Experiment.from_args(args, base=serve_profile())
 
     from repro.data import synthetic_prompts
     prompts = synthetic_prompts(args.requests)
     key = jax.random.PRNGKey(exp.cfg.seed)
     engine = exp.build_engine(key, max_batch=args.max_batch, buckets=buckets,
+                              step_tiers=step_tiers,
                               deadline_s=args.deadline_ms / 1e3)
 
     # warmup: pre-trace the bucket grid and prime the cond encoder; both are
@@ -89,10 +104,19 @@ def main(argv=None) -> None:
     print(f"steady-state: served {args.requests} requests in {dt:.3f}s "
           f"({args.requests/dt:.1f} req/s); latents {latents.shape}, "
           f"rms={float(np.sqrt((lat**2).mean())):.3f}")
-    print(f"engine: buckets={s['buckets']} dp={s['data_parallel']} "
-          f"dispatches={s['dispatches']} padded_lanes={s['padded_lanes']} "
+    print(f"engine: buckets={s['buckets']} step_tiers={s['step_tiers']} "
+          f"dp={s['data_parallel']} dispatches={s['dispatches']} "
+          f"padded_lanes={s['padded_lanes']} "
           f"cold_dispatches={s['cold_dispatches']} "
           f"cond_cache={s['cond_cache']}")
+    if args.stats_json:
+        payload = json.dumps(s, indent=2, sort_keys=True)
+        if args.stats_json == "-":
+            print(payload)
+        else:
+            with open(args.stats_json, "w") as f:
+                f.write(payload + "\n")
+            print(f"stats: wrote JSON snapshot to {args.stats_json}")
     assert s["cold_dispatches"] == 0, "steady-state serve hit a compile"
     assert np.isfinite(lat).all()
 

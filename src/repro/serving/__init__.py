@@ -1,16 +1,23 @@
 """``repro.serving`` — the production inference subsystem.
 
-A request-queue engine with bucketed continuous batching (bounded jit
-recompiles + deadline flush), compile-cache warmup, an LRU cond-encoding
+A multi-tenant request-queue engine with bucketed continuous batching
+(bounded jit recompiles on both the batch and num_steps axes + deadline
+flush), priority classes with weighted-fair dequeue across tenants,
+per-request SLO deadlines, admission control with structured
+retry-after backpressure, compile-cache warmup, an LRU cond-encoding
 cache, and sharded inference over ``repro.distributed``'s "data" mesh —
-bit-identical per request across bucket layouts, batch mates, and device
-counts (the per-request-keyed rollout invariant).
+bit-identical per request across bucket layouts, batch mates, scheduling
+order, and device counts (the per-request-keyed rollout invariant).
 
 ``FlowSampler`` (repro.api.serving) and ``launch/serve.py`` are thin
 clients; trainers opt in via ``BaseTrainer.attach_engine``.
 """
-from repro.serving.buckets import BucketGrid, default_buckets
+from repro.serving.admission import (DEFAULT_CLASSES, AdmissionConfig,
+                                     AdmissionController, PriorityClass,
+                                     RetryAfter)
+from repro.serving.buckets import BucketGrid, StepGrid, default_buckets
 from repro.serving.engine import CondCache, Request, ServingEngine
 
-__all__ = ["BucketGrid", "default_buckets", "CondCache", "Request",
-           "ServingEngine"]
+__all__ = ["AdmissionConfig", "AdmissionController", "BucketGrid",
+           "CondCache", "DEFAULT_CLASSES", "PriorityClass", "Request",
+           "RetryAfter", "ServingEngine", "StepGrid", "default_buckets"]

@@ -83,3 +83,43 @@ class BucketGrid:
 
     def __repr__(self) -> str:
         return f"BucketGrid(sizes={self.sizes}, dp={self.dp})"
+
+
+class StepGrid:
+    """The admitted ``num_steps`` quality tiers — the second axis of the
+    compile grid.
+
+    The batch ladder bounds one shape axis; this bounds the other: a
+    request may only ask for a ``num_steps`` value in the tier grid
+    (e.g. a cheap 4-step draft tier next to the full-quality tier), and
+    ``warmup()`` pre-traces every (bucket × step tier) pair.  Together
+    they make "steady state never compiles" *provable*: every admitted
+    request lands on a warmed shape, instead of one odd ``num_steps=7``
+    submit silently compiling a fresh executable on the hot path.
+    """
+
+    def __init__(self, tiers: Optional[Sequence[int]] = None, *,
+                 default: int):
+        if default < 1:
+            raise ValueError(f"num_steps must be >= 1, got {default}")
+        raw = tuple(tiers) if tiers else ()
+        if any(s < 1 for s in raw):
+            raise ValueError(f"step tiers must be >= 1, got {raw}")
+        self.default = default
+        self.sizes: Tuple[int, ...] = tuple(sorted(set(raw) | {default}))
+
+    def resolve(self, num_steps: Optional[int]) -> int:
+        """Default tier for ``None``; otherwise admit only grid members —
+        an off-grid value would compile on the hot path."""
+        if num_steps is None:
+            return self.default
+        if num_steps not in self.sizes:
+            raise ValueError(
+                f"num_steps={num_steps} is outside the warmed step-tier "
+                f"grid {self.sizes} — off-grid values would compile on "
+                "the hot path; pass step_tiers= at engine construction "
+                "to widen the grid")
+        return num_steps
+
+    def __repr__(self) -> str:
+        return f"StepGrid(sizes={self.sizes}, default={self.default})"

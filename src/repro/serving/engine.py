@@ -1,21 +1,34 @@
-"""``ServingEngine`` — request-queue serving with bucketed continuous
-batching, compile-cache warmup, cond-encoding cache, and sharded inference.
+"""``ServingEngine`` — multi-tenant request-queue serving with bucketed
+continuous batching, admission control, compile-cache warmup, cond-encoding
+cache, and sharded inference.
 
 Architecture (the production path the ROADMAP north star asks for):
 
 * **Requests**, not arrays, are the unit of work: ``submit()`` enqueues a
-  (cond, key, num_steps) request and returns a handle; full buckets
-  dispatch immediately (continuous batching — a full batch never waits),
-  partial buckets flush when the oldest request crosses the deadline
-  (``poll``) or on ``drain()``.
-* **Shape buckets** bound jit recompiles: batches are padded up to a fixed
-  tier ladder (:class:`repro.serving.buckets.BucketGrid`), and ``warmup()``
-  pre-traces the whole (bucket × num_steps) grid so steady-state serving
-  never compiles.  Padding is *correct*, not just safe, because execution
+  (cond, key, num_steps) request under a (tenant, priority class) and
+  returns a handle; full buckets dispatch as in-flight slots allow
+  (continuous batching — a full batch never waits for the deadline),
+  partial buckets flush when the oldest request crosses its dispatch
+  deadline (``poll``) or on ``drain()``.
+* **Multi-tenancy** (:mod:`repro.serving.admission`): priority classes
+  with weighted-fair stride scheduling across tenants, per-request SLO
+  deadlines (``slo_s``, or the class default), and admission control —
+  each class's queue depth is bounded, and an over-capacity ``submit()``
+  raises :class:`repro.serving.admission.RetryAfter` (a structured,
+  JSON-ready rejection with a deterministic ``retry_after_s``) instead of
+  queueing unboundedly.  ``max_inflight`` bounds dispatched-but-unfetched
+  batches, so backpressure propagates from slow consumers to rejections,
+  not to memory growth.
+* **Shape buckets** bound jit recompiles on BOTH axes: batches are padded
+  up to a fixed tier ladder (:class:`repro.serving.buckets.BucketGrid`)
+  and ``num_steps`` is admitted only from the step-tier grid
+  (:class:`repro.serving.buckets.StepGrid`), so ``warmup()`` pre-traces
+  the whole (bucket × step tier) grid and steady-state serving *provably*
+  never compiles.  Padding is correct, not just safe, because execution
   uses the per-request-keyed rollout (:func:`repro.core.rollout
   .rollout_keyed`): each request's latent is a pure function of its own
-  (cond, key), bit-identical across bucket sizes, batch mates, and device
-  layouts.
+  (cond, key), bit-identical across bucket sizes, batch mates, scheduling
+  order, and device layouts.
 * **Cond-encoding cache**: repeat prompts skip the ConditionProvider (an
   LRU keyed by prompt string) — the serving-side analogue of the paper's
   §2.2 preprocessing cache.
@@ -26,15 +39,20 @@ Architecture (the production path the ROADMAP north star asks for):
   real accelerators unchanged — with output bit-identical per request to
   single-device.
 
-Trainers can opt their online rollouts into the same engine
-(``BaseTrainer.attach_engine``): ``ServingEngine.rollout`` returns full
-:class:`Trajectory` batches (capacity-chunked, bucket-padded, unpadded on
-the way out), sharing the compile cache with the serving path.
+``engine.stats`` is a JSON-serializable health snapshot (queue depths,
+rejections, SLO misses, dispatch/compile accounting) consumed by
+``launch/serve.py --stats-json``.  Trainers can opt their online rollouts
+into the same engine (``BaseTrainer.attach_engine``):
+``ServingEngine.rollout`` returns full :class:`Trajectory` batches
+(capacity-chunked, bucket-padded, unpadded on the way out), sharing the
+compile cache with the serving path.
 """
 from __future__ import annotations
 
+import itertools
+import math
 import time
-from collections import OrderedDict, deque
+from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
 import jax
@@ -43,25 +61,39 @@ import numpy as np
 
 from repro import distributed
 from repro.core.rollout import Trajectory, request_keys
-from repro.serving.buckets import BucketGrid
+from repro.serving.admission import AdmissionConfig, AdmissionController
+from repro.serving.buckets import BucketGrid, StepGrid
+
+# distinct auto-key stream per engine instance: auto keys are
+# fold_in(fold_in(BASE, engine_seq), rid), which collides neither with
+# user PRNGKey(seed) submissions nor with another engine's auto keys
+_AUTO_KEY_BASE = 0x466C6F77            # "Flow"
+_ENGINE_SEQ = itertools.count()
 
 
 class _BatchResult:
     """Shared result holder for one dispatched bucket: keeps the device
     array unmaterialized (dispatches stay async — the next batch's queue
     work overlaps this one's compute) and pays the device->host copy once
-    per BATCH on first access, never per request."""
+    per BATCH on first access, never per request.  Materializing retires
+    the batch's in-flight slot (``on_materialize``) — the backpressure
+    signal that lets the engine dispatch the next queued bucket."""
 
-    __slots__ = ("_dev", "_np")
+    __slots__ = ("_dev", "_np", "_retire")
 
-    def __init__(self, x0_dev: jax.Array):
+    def __init__(self, x0_dev: jax.Array,
+                 on_materialize: Optional[Callable[[], None]] = None):
         self._dev = x0_dev
         self._np: Optional[np.ndarray] = None
+        self._retire = on_materialize
 
     def row(self, i: int) -> np.ndarray:
         if self._np is None:
             self._np = np.asarray(self._dev)
             self._dev = None
+            if self._retire is not None:
+                retire, self._retire = self._retire, None
+                retire()
         return self._np[i]
 
 
@@ -71,17 +103,27 @@ class Request:
     cond/key/result live host-side (numpy): per-row device slicing costs
     ~ms per op on the queue path, so the engine crosses the device boundary
     exactly twice per *dispatch* (one device_put in, one lazy copy out),
-    never per request."""
+    never per request.  ``deadline`` is the dispatch-by time (batching
+    flush deadline or SLO deadline, whichever is sooner); ``slo_deadline``
+    is the completion target used for SLO-miss accounting."""
 
-    __slots__ = ("rid", "cond", "key", "num_steps", "arrival", "_result")
+    __slots__ = ("rid", "cond", "key", "num_steps", "arrival", "tenant",
+                 "priority", "deadline", "slo_deadline", "_result")
 
     def __init__(self, rid: int, cond: np.ndarray, key: np.ndarray,
-                 num_steps: int, arrival: float):
+                 num_steps: int, arrival: float, *,
+                 tenant: str = "default", priority: str = "standard",
+                 deadline: float = math.inf,
+                 slo_deadline: float = math.inf):
         self.rid = rid
         self.cond = cond
         self.key = key
         self.num_steps = num_steps
         self.arrival = arrival
+        self.tenant = tenant
+        self.priority = priority
+        self.deadline = deadline
+        self.slo_deadline = slo_deadline
         self._result: Optional[tuple] = None        # (_BatchResult, row)
 
     @property
@@ -132,29 +174,45 @@ class ServingEngine:
     ``params`` may be None for the trainer-rollout path (params are then
     passed per :meth:`rollout` call); the queue path (:meth:`submit` /
     :meth:`serve`) requires them at construction.
+
+    ``step_tiers`` is the admitted ``num_steps`` quality ladder (always
+    including ``num_steps`` itself); ``admission`` configures priority
+    classes / tenant weights / queue bounds; ``max_inflight`` bounds
+    dispatched-but-unfetched batches (the backpressure window).
     """
 
     def __init__(self, adapter, scheduler, params=None, *,
                  num_steps: int, max_batch: int = 8,
                  buckets: Optional[Sequence[int]] = None,
+                 step_tiers: Optional[Sequence[int]] = None,
                  deadline_s: float = 0.005,
+                 admission: Optional[AdmissionConfig] = None,
+                 max_inflight: int = 4,
                  mesh=None, provider=None, cond_len: int = 16,
                  cond_cache_entries: int = 1024,
                  clock: Callable[[], float] = time.monotonic):
-        if num_steps < 1:
-            raise ValueError(f"num_steps must be >= 1, got {num_steps}")
+        if max_inflight < 1:
+            raise ValueError(
+                f"max_inflight must be >= 1, got {max_inflight}")
         self.adapter = adapter
         self.scheduler = scheduler
         self.params = params
+        self.steps = StepGrid(step_tiers, default=num_steps)
         self.num_steps = num_steps
         self.deadline_s = deadline_s
+        self.max_inflight = max_inflight
         self.mesh = mesh
         self.provider = provider
         self.cond_len = cond_len
         self.clock = clock
         dp = 1 if mesh is None else mesh.shape[distributed.DATA_AXIS]
         self.grid = BucketGrid(buckets, max_batch=max_batch, dp=dp)
+        self.admission = AdmissionController(admission)
         self.cond_cache = CondCache(cond_cache_entries)
+        # one-time constructor sync, not a hot path: the base key must be
+        # host-side so per-request fold_in never touches a device array
+        self._base_key = np.asarray(jax.random.fold_in(  # jaxlint: disable=R002 — one-time __init__ fetch, submit() folds from host memory
+            jax.random.PRNGKey(_AUTO_KEY_BASE), next(_ENGINE_SEQ)))
         # one jitted executor per (num_steps, x0_only) tier; jit's shape
         # cache then holds one executable per bucket size underneath it.
         # The queue path uses the x0-only variant (XLA drops the stacked
@@ -163,11 +221,13 @@ class ServingEngine:
         self._masks: Dict[int, jax.Array] = {}
         self._traced: set = set()          # (bucket, num_steps) ever run
         self._warmed: set = set()          # (bucket, num_steps) pre-traced
-        self._queues: Dict[int, deque] = {}
+        self._inflight = 0
         self._next_rid = 0
         self.counters: Dict[str, Any] = {
             "requests": 0, "dispatches": {}, "padded_lanes": 0,
             "compiles": 0, "cold_dispatches": 0, "warmup_s": 0.0,
+            "served_by_class": {}, "served_by_tenant": {},
+            "slo_misses": {},
         }
 
     # ---------------------------------------------------------- construction
@@ -214,65 +274,104 @@ class ServingEngine:
     # ----------------------------------------------------------------- queue
     def submit(self, cond=None, *, prompt: Optional[str] = None,
                key: Optional[jax.Array] = None, seed: Optional[int] = None,
-               num_steps: Optional[int] = None) -> Request:
+               num_steps: Optional[int] = None, tenant: str = "default",
+               priority: Optional[str] = None,
+               slo_s: Optional[float] = None) -> Request:
         """Enqueue one request; returns its handle.  The request's latent is
         fully determined by (cond, key, num_steps) — the same key always
-        yields the same latent, whatever batch it lands in."""
+        yields the same latent, whatever batch, tenant mix, or scheduling
+        order it lands in.
+
+        Raises :class:`repro.serving.admission.RetryAfter` (structured,
+        JSON-ready, with a ``retry_after_s`` hint) when the priority
+        class's queue is at its depth bound, and ``ValueError`` for
+        off-grid ``num_steps`` or a cond shape outside the warmed grid —
+        both would otherwise compile on the hot path."""
         if (cond is None) == (prompt is None):
             raise ValueError("submit exactly one of cond= or prompt=")
         if cond is None:
             cond = self.encode([prompt])[0]
         cond = np.asarray(cond)
-        if cond.ndim != 2:
+        expect = (self.cond_len, self.adapter.cond_dim)
+        if cond.shape != expect:
             raise ValueError(
-                f"request cond must be (Lc, cond_dim), got {cond.shape}")
-        if key is None:
-            key = jax.random.PRNGKey(
-                seed if seed is not None else self._next_rid)
-        key = np.asarray(key)
+                f"request cond must be (Lc, cond_dim) = {expect} — the "
+                f"shape the compile grid is warmed for — got {cond.shape}")
         steps = self._resolve_steps(num_steps)
-        req = Request(self._next_rid, cond, key, steps, self.clock())
+        cls = self.admission.resolve_class(priority)
+        if key is None:
+            if seed is not None:
+                key = jax.random.PRNGKey(seed)
+            else:
+                # fold_in from the per-engine base key: never collides
+                # with a user PRNGKey(seed) and never repeats across
+                # engine instances (PRNGKey(rid) did both)
+                key = jax.random.fold_in(
+                    jnp.asarray(self._base_key), self._next_rid)
+        key = np.asarray(key)
+        if slo_s is not None and slo_s <= 0:
+            raise ValueError(f"slo_s must be > 0, got {slo_s}")
+        slo = slo_s if slo_s is not None else cls.slo_s
+        now = self.clock()
+        slo_deadline = now + slo if slo is not None else math.inf
+        req = Request(self._next_rid, cond, key, steps, now,
+                      tenant=tenant, priority=cls.name,
+                      deadline=min(now + self.deadline_s, slo_deadline),
+                      slo_deadline=slo_deadline)
+        self.admission.admit(req, now)     # may raise RetryAfter
         self._next_rid += 1
         self.counters["requests"] += 1
-        q = self._queues.setdefault(steps, deque())
-        q.append(req)
-        # continuous batching: a full bucket never waits for the deadline
-        while len(q) >= self.grid.capacity:
-            self._dispatch([q.popleft() for _ in range(self.grid.capacity)])
+        self._pump(now)
         return req
 
+    def _pump(self, now: float) -> int:
+        """Continuous batching under backpressure: dispatch full buckets
+        while in-flight slots allow.  Returns requests dispatched."""
+        n = 0
+        while self._inflight < self.max_inflight:
+            tier = next((s for s in self.admission.tiers()
+                         if self.admission.ready(s) >= self.grid.capacity),
+                        None)
+            if tier is None:
+                break
+            batch = self.admission.take(tier, self.grid.capacity, now)
+            self._dispatch(batch)
+            n += len(batch)
+        return n
+
     def poll(self) -> int:
-        """Flush every partial batch whose oldest request has crossed the
-        deadline.  Returns the number of requests dispatched."""
+        """Flush every queue holding a request past its dispatch deadline
+        (the batching flush deadline or its SLO deadline, whichever came
+        first) — deadline flushes bypass the in-flight cap: a deadline is
+        a promise, backpressure is a policy.  Then dispatch any full
+        buckets the freed queues allow.  Returns requests dispatched."""
         now = self.clock()
         n = 0
-        for q in self._queues.values():
-            while q and (now - q[0].arrival) >= self.deadline_s:
-                take = min(len(q), self.grid.capacity)
-                self._dispatch([q.popleft() for _ in range(take)])
-                n += take
+        for steps in list(self.admission.tiers()):
+            while self.admission.has_expired(steps, now):
+                batch = self.admission.take(steps, self.grid.capacity, now)
+                self._dispatch(batch)
+                n += len(batch)
+        n += self._pump(now)
         return n
 
     def drain(self) -> int:
         """Dispatch everything still queued, deadline or not."""
+        now = self.clock()
         n = 0
-        for q in self._queues.values():
-            while q:
-                take = min(len(q), self.grid.capacity)
-                self._dispatch([q.popleft() for _ in range(take)])
-                n += take
+        for steps in list(self.admission.tiers()):
+            while self.admission.ready(steps):
+                batch = self.admission.take(steps, self.grid.capacity, now)
+                self._dispatch(batch)
+                n += len(batch)
         return n
 
     def pending(self) -> int:
-        return sum(len(q) for q in self._queues.values())
+        return self.admission.pending()
 
     # ------------------------------------------------------------- execution
     def _resolve_steps(self, num_steps: Optional[int]) -> int:
-        if num_steps is None:
-            return self.num_steps
-        if num_steps < 1:
-            raise ValueError(f"num_steps must be >= 1, got {num_steps}")
-        return num_steps
+        return self.steps.resolve(num_steps)
 
     def _account(self, bucket: int, num_steps: int, n_real: int,
                  x0_only: bool) -> None:
@@ -324,6 +423,11 @@ class ServingEngine:
         return xp.concatenate(
             [arr, xp.zeros((pad,) + arr.shape[1:], arr.dtype)])
 
+    def _retire_inflight(self) -> None:
+        self._inflight -= 1
+        # a freed slot may unblock a queued full bucket right away
+        self._pump(self.clock())
+
     def _dispatch(self, batch: List[Request]) -> None:
         if self.params is None:
             raise RuntimeError(
@@ -332,29 +436,47 @@ class ServingEngine:
         steps = batch[0].num_steps
         bucket = self.grid.pick(len(batch))
         self._account(bucket, steps, len(batch), x0_only=True)
+        now = self.clock()
+        served_c = self.counters["served_by_class"]
+        served_t = self.counters["served_by_tenant"]
+        misses = self.counters["slo_misses"]
+        for r in batch:
+            served_c[r.priority] = served_c.get(r.priority, 0) + 1
+            served_t[r.tenant] = served_t.get(r.tenant, 0) + 1
+            if now > r.slo_deadline:
+                misses[r.priority] = misses.get(r.priority, 0) + 1
         cond = self._pad(np.stack([r.cond for r in batch]), bucket)
         keys = self._pad(np.stack([r.key for r in batch]), bucket)
-        holder = _BatchResult(self._execute(cond, keys, steps))
+        self._inflight += 1
+        holder = _BatchResult(self._execute(cond, keys, steps),
+                              on_materialize=self._retire_inflight)
         for i, r in enumerate(batch):
             r._result = (holder, i)
 
     # ----------------------------------------------------------- conveniences
     def serve(self, requests: Union[Sequence[str], jax.Array],
               key: Optional[jax.Array] = None,
-              num_steps: Optional[int] = None) -> jax.Array:
+              num_steps: Optional[int] = None, *,
+              tenant: str = "default",
+              priority: Optional[str] = None) -> jax.Array:
         """Synchronous batch serve: prompts (via the cond cache) or a
         (N, Lc, D) cond array -> (N, Lt, ld) latents.  Request i's key is
         ``fold_in(key, i)`` — per-request results are independent of N,
         bucket layout, and max_batch."""
         if key is None:
             key = jax.random.PRNGKey(0)
-        if len(requests) and isinstance(requests[0], str):
+        if len(requests) == 0:
+            fc = self.adapter.flow_cfg
+            return jnp.zeros((0, fc.latent_tokens, fc.latent_dim),
+                             jnp.float32)
+        if isinstance(requests[0], str):
             cond = self.encode(list(requests))
         else:
             cond = np.asarray(requests)
         keys = np.asarray(request_keys(key, cond.shape[0]))
         handles = [self.submit(cond=cond[i], key=keys[i],
-                               num_steps=num_steps)
+                               num_steps=num_steps, tenant=tenant,
+                               priority=priority)
                    for i in range(cond.shape[0])]
         self.drain()
         return jnp.asarray(np.stack([h.result() for h in handles]))
@@ -393,13 +515,15 @@ class ServingEngine:
     # ---------------------------------------------------------------- warmup
     def warmup(self, num_steps_tiers: Optional[Sequence[int]] = None,
                params=None) -> Dict[str, float]:
-        """Pre-trace the full (bucket × num_steps) grid so steady-state
-        serving never compiles.  Returns per-shape trace+first-run seconds;
-        the total also lands in ``counters['warmup_s']``."""
+        """Pre-trace the full (bucket × step tier) grid so steady-state
+        serving never compiles — by default every tier in ``step_tiers``
+        (submit admits nothing outside it).  Returns per-shape
+        trace+first-run seconds; the total also lands in
+        ``counters['warmup_s']``."""
         params = params if params is not None else self.params
         if params is None:
             raise RuntimeError("warmup needs params")
-        tiers = sorted(set(num_steps_tiers or [self.num_steps]))
+        tiers = sorted(set(num_steps_tiers or self.steps.sizes))
         report: Dict[str, float] = {}
         for steps in tiers:
             for bucket in self.grid.sizes:
@@ -418,23 +542,41 @@ class ServingEngine:
         return report
 
     # ----------------------------------------------------------------- stats
+    @staticmethod
+    def _shape_label(shape: tuple) -> str:
+        bucket, steps, x0_only = shape
+        return f"b{bucket}/s{steps}" + ("" if x0_only else "/traj")
+
     @property
     def stats(self) -> Dict[str, Any]:
+        """JSON-serializable stats/health snapshot (``json.dumps`` safe —
+        the health endpoint contract; tuple keys are stringified as
+        ``"b<bucket>/s<steps>"``)."""
         c = self.counters
         return {
             "requests": c["requests"],
             "pending": self.pending(),
-            "dispatches": dict(c["dispatches"]),
+            "inflight": self._inflight,
+            "max_inflight": self.max_inflight,
+            "dispatches": {f"b{b}/s{s}": n
+                           for (b, s), n in sorted(c["dispatches"].items())},
             "padded_lanes": c["padded_lanes"],
-            "compiled_shapes": sorted(self._traced),
-            "warmed_shapes": sorted(self._warmed),
+            "compiled_shapes": [self._shape_label(s)
+                                for s in sorted(self._traced)],
+            "warmed_shapes": [self._shape_label(s)
+                              for s in sorted(self._warmed)],
             "compiles": c["compiles"],
             "cold_dispatches": c["cold_dispatches"],
             "warmup_s": c["warmup_s"],
+            "priorities": self.admission.snapshot(),
+            "served_by_class": dict(c["served_by_class"]),
+            "served_by_tenant": dict(c["served_by_tenant"]),
+            "slo_misses": dict(c["slo_misses"]),
             "cond_cache": {"hits": self.cond_cache.hits,
                            "misses": self.cond_cache.misses,
                            "entries": len(self.cond_cache)},
-            "buckets": self.grid.sizes,
+            "buckets": list(self.grid.sizes),
+            "step_tiers": list(self.steps.sizes),
             "data_parallel": (1 if self.mesh is None
                               else self.mesh.shape[distributed.DATA_AXIS]),
         }

@@ -1,10 +1,17 @@
-"""repro.serving engine tests: bucket policy, remainder/padded batches,
-per-request determinism (the keyed-rollout invariant all batching rests
-on), deadline-flush admission, cond-cache behaviour, warmup, trainer
-opt-in, and sharded-vs-single-device bit-identity (4 faked CPU host
-devices, spawned in a subprocess so the tier-1 environment stays
-single-device)."""
+"""repro.serving engine tests: bucket/step-tier policy, remainder/padded
+batches, per-request determinism (the keyed-rollout invariant all batching
+rests on), deadline-flush admission, priority classes + weighted-fair
+multi-tenant dequeue, SLO deadlines, admission control with structured
+retry-after backpressure, cond-cache behaviour, warmup, trainer opt-in,
+sharded-vs-single-device bit-identity (4 faked CPU host devices, spawned
+in a subprocess so the tier-1 environment stays single-device), and a
+deterministic seeded fuzz harness over submit/poll/fetch/drain
+interleavings (``REPRO_FUZZ_SEEDS`` scales the corpus; ``make fuzz-serve``
+runs 200)."""
+import functools
+import json
 import os
+import random
 import subprocess
 import sys
 
@@ -19,7 +26,9 @@ from repro.core import schedulers
 from repro.core.rollout import request_keys, rollout_keyed
 from repro.models import params as params_lib
 from repro.models.flow import FlowAdapter
-from repro.serving import BucketGrid, ServingEngine, default_buckets
+from repro.serving import (AdmissionConfig, BucketGrid, PriorityClass,
+                           RetryAfter, ServingEngine, StepGrid,
+                           default_buckets)
 
 KEY = jax.random.PRNGKey(7)
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -93,6 +102,21 @@ def test_bucket_grid_alignment_never_raises_memory_cap():
         BucketGrid([16], max_batch=8)
 
 
+def test_step_grid_admits_only_warmed_tiers():
+    """The second compile-grid axis: num_steps outside the tier ladder is
+    rejected at submit — an off-grid value would compile on the hot path,
+    defeating the warmup contract."""
+    g = StepGrid((4, 8), default=8)
+    assert g.sizes == (4, 8)
+    assert g.resolve(None) == 8 and g.resolve(4) == 4
+    with pytest.raises(ValueError, match="step-tier grid"):
+        g.resolve(6)
+    # the default is always a member, even when tiers omit it
+    assert StepGrid((2,), default=3).sizes == (2, 3)
+    with pytest.raises(ValueError, match=">= 1"):
+        StepGrid((0,), default=3)
+
+
 # --------------------------------------------------- batch shape correctness
 
 def test_remainder_batch_returns_exactly_n_outputs():
@@ -103,7 +127,7 @@ def test_remainder_batch_returns_exactly_n_outputs():
     assert lat.shape == (7, 8, 8)
     assert np.isfinite(np.asarray(lat)).all()
     stats = eng.stats
-    assert stats["dispatches"] == {(4, 3): 2}
+    assert stats["dispatches"] == {"b4/s3": 2}
     assert stats["padded_lanes"] == 1          # 3-request remainder in b=4
     # request order: row i is exactly the single-request serve of key i
     keys = request_keys(KEY, 7)
@@ -112,6 +136,18 @@ def test_remainder_batch_returns_exactly_n_outputs():
     eng2.drain()
     np.testing.assert_array_equal(np.asarray(lat[5]),
                                   np.asarray(h.result()))
+
+
+def test_serve_empty_request_list_returns_empty_batch():
+    """Regression: serve([]) used to reach np.stack([]) and raise — an
+    empty request list is a valid (if quiet) production input and must
+    return a correctly-shaped (0, Lt, ld) array from either input form."""
+    eng = _engine()
+    lat = eng.serve([])
+    assert lat.shape == (0, 8, 8) and lat.dtype == jnp.float32
+    lat = eng.serve(np.zeros((0, 4, 512), np.float32), KEY)
+    assert lat.shape == (0, 8, 8)
+    assert eng.stats["requests"] == 0 and eng.stats["dispatches"] == {}
 
 
 def test_per_request_determinism_across_batching():
@@ -182,7 +218,7 @@ def test_full_bucket_dispatches_immediately():
     handles = [eng.submit(cond=COND[i], key=keys[i]) for i in range(4)]
     assert all(h.done for h in handles)        # dispatched at 4th submit
     assert eng.pending() == 0
-    assert eng.stats["dispatches"] == {(4, 3): 1}
+    assert eng.stats["dispatches"] == {"b4/s3": 1}
 
 
 def test_partial_bucket_waits_for_deadline_then_flushes():
@@ -197,7 +233,7 @@ def test_partial_bucket_waits_for_deadline_then_flushes():
     clk.t = 0.6
     assert eng.poll() == 2                     # oldest crossed the deadline
     assert all(h.done for h in handles)
-    assert eng.stats["dispatches"] == {(2, 3): 1}   # smallest covering tier
+    assert eng.stats["dispatches"] == {"b2/s3": 1}  # smallest covering tier
     with pytest.raises(RuntimeError, match="not been served"):
         _engine(clock=_Clock(), deadline_s=1e9) \
             .submit(cond=COND[0], key=keys[0]).result()
@@ -212,14 +248,217 @@ def test_drain_flushes_everything_regardless_of_deadline():
 
 
 def test_num_steps_tiers_are_separate_buckets():
-    eng = _engine()
+    eng = _engine(step_tiers=(2, 3))
     h3 = eng.submit(cond=COND[0], seed=0)                 # default 3 steps
     h2 = eng.submit(cond=COND[1], seed=1, num_steps=2)
     eng.drain()
     assert h3.result().shape == h2.result().shape == (8, 8)
-    assert set(eng.stats["dispatches"]) == {(1, 3), (1, 2)}
+    assert set(eng.stats["dispatches"]) == {"b1/s3", "b1/s2"}
     assert not np.array_equal(np.asarray(h3.result()),
                               np.asarray(h2.result()))
+
+
+def test_submit_rejects_num_steps_outside_step_grid():
+    """Regression (unbounded-recompile hole): an off-grid num_steps used
+    to compile a fresh executable on the hot path — now it is rejected at
+    submit, so steady state provably never compiles."""
+    eng = _engine(step_tiers=(2, 3))
+    with pytest.raises(ValueError, match="step-tier grid"):
+        eng.submit(cond=COND[0], seed=0, num_steps=7)
+    with pytest.raises(ValueError, match="step-tier grid"):
+        eng.submit(cond=COND[0], seed=0, num_steps=0)
+    assert eng.pending() == 0                  # nothing half-enqueued
+
+
+def test_submit_rejects_cond_shape_outside_warmed_grid():
+    """Regression (unbounded-recompile hole): cond was only checked for
+    ndim == 2, so a request with a different Lc or cond_dim compiled per
+    distinct shape in the hot path — now the exact warmed (cond_len,
+    cond_dim) shape is enforced."""
+    eng = _engine()                            # cond_len=4, cond_dim=512
+    with pytest.raises(ValueError, match=r"\(4, 512\)"):
+        eng.submit(cond=np.zeros((5, 512), np.float32), seed=0)   # wrong Lc
+    with pytest.raises(ValueError, match=r"\(4, 512\)"):
+        eng.submit(cond=np.zeros((4, 256), np.float32), seed=0)   # wrong D
+    assert eng.pending() == 0
+
+
+def test_auto_keys_do_not_collide_with_seeds_or_across_engines():
+    """Regression: the auto key used to be PRNGKey(rid), which collided
+    with a user submit(seed=rid) and repeated across engine instances —
+    auto keys are now fold_in chains off a per-engine base key."""
+    eng = _engine()
+    h_auto = eng.submit(cond=COND[0])          # auto key, rid == 0
+    h_seed = eng.submit(cond=COND[0], seed=h_auto.rid)
+    eng.drain()
+    assert not np.array_equal(np.asarray(h_auto.result()),
+                              np.asarray(h_seed.result()))
+    # a second engine's auto key for the same rid is a different stream
+    eng2 = _engine()
+    h_auto2 = eng2.submit(cond=COND[0])
+    eng2.drain()
+    assert h_auto2.rid == h_auto.rid
+    assert not np.array_equal(np.asarray(h_auto.result()),
+                              np.asarray(h_auto2.result()))
+    # user-seeded submits stay reproducible across engines
+    h_seed2 = eng2.submit(cond=COND[0], seed=0)
+    eng2.drain()
+    h_seed1 = eng.submit(cond=COND[0], seed=0)
+    eng.drain()
+    np.testing.assert_array_equal(np.asarray(h_seed1.result()),
+                                  np.asarray(h_seed2.result()))
+
+
+# ------------------------------------------- multi-tenant admission control
+
+def _admission(**kw):
+    kw.setdefault("classes", (
+        PriorityClass("interactive", weight=4, max_depth=8, slo_s=0.3),
+        PriorityClass("standard", weight=2, max_depth=6),
+        PriorityClass("batch", weight=1, max_depth=5),
+    ))
+    return AdmissionConfig(**kw)
+
+
+def test_admission_config_validation():
+    with pytest.raises(ValueError, match="default_class"):
+        AdmissionConfig(default_class="nope")
+    with pytest.raises(ValueError, match="duplicate"):
+        AdmissionConfig(classes=(PriorityClass("a"), PriorityClass("a")),
+                        default_class="a")
+    with pytest.raises(ValueError, match="weight"):
+        PriorityClass("x", weight=0)
+    with pytest.raises(ValueError, match="max_depth"):
+        PriorityClass("x", max_depth=0)
+    eng = _engine(admission=_admission())
+    with pytest.raises(ValueError, match="unknown priority class"):
+        eng.submit(cond=COND[0], seed=0, priority="platinum")
+    with pytest.raises(ValueError, match="slo_s"):
+        eng.submit(cond=COND[0], seed=0, slo_s=-1.0)
+    with pytest.raises(ValueError, match="max_inflight"):
+        _engine(max_inflight=0)
+
+
+def test_over_capacity_submit_rejected_with_structured_retry_after():
+    """THE admission acceptance criterion: once a priority class is at its
+    depth bound, submit raises RetryAfter — a structured, JSON-ready
+    rejection with a deterministic retry hint — instead of queueing
+    unboundedly.  After a flush frees the queue, the retry succeeds."""
+    clk = _Clock()
+    eng = _engine(admission=_admission(), deadline_s=0.5, clock=clk,
+                  max_inflight=1)
+    # occupy the only in-flight slot so queues actually build up
+    for i in range(4):
+        eng.submit(cond=COND[i], seed=i)
+    assert eng.stats["inflight"] == 1
+    handles = [eng.submit(cond=COND[i % 7], seed=10 + i, priority="batch")
+               for i in range(5)]              # batch max_depth == 5
+    with pytest.raises(RetryAfter) as ei:
+        eng.submit(cond=COND[0], seed=99, priority="batch")
+    err = ei.value
+    assert (err.priority, err.depth, err.limit) == ("batch", 5, 5)
+    payload = err.to_json()
+    assert json.loads(json.dumps(payload)) == payload
+    assert payload["error"] == "over_capacity"
+    # the hint is the earliest queued dispatch deadline: flush at t=0.5
+    assert payload["retry_after_s"] == pytest.approx(0.5)
+    # other classes are unaffected by batch's full queue
+    eng.submit(cond=COND[0], seed=50, priority="interactive")
+    assert eng.stats["priorities"]["batch"]["rejected"] == 1
+    # reject-then-retry: the deadline flush frees the queue
+    clk.t = 0.6
+    eng.poll()
+    assert eng.pending() == 0
+    h = eng.submit(cond=COND[0], seed=99, priority="batch")
+    clk.t = 2.0
+    eng.poll()
+    assert h.done and all(x.done for x in handles)
+
+
+def test_weighted_fair_dequeue_across_tenants_and_classes():
+    """With contention (in-flight slot occupied), the freed batch is
+    filled by stride scheduling: interactive (weight 4) gets both its
+    requests in, the backlogged batch tenant gets the remaining slots —
+    but is NOT starved."""
+    clk = _Clock()
+    eng = _engine(admission=_admission(), deadline_s=1e9, clock=clk,
+                  max_inflight=1)
+    first = [eng.submit(cond=COND[i], seed=i) for i in range(4)]
+    assert all(h.done for h in first)          # occupies the slot
+    heavy = [eng.submit(cond=COND[i % 7], seed=10 + i, priority="batch",
+                        tenant="miner") for i in range(5)]
+    light = [eng.submit(cond=COND[i], seed=30 + i, priority="interactive",
+                        tenant="human") for i in range(2)]
+    assert eng.pending() == 7
+    # fetching a result retires the in-flight slot -> one fair batch goes
+    first[0].result()
+    done_heavy = sum(h.done for h in heavy)
+    done_light = sum(h.done for h in light)
+    assert done_light == 2                     # weight-4 class never waits
+    assert done_heavy == 2                     # and batch is not starved
+    assert eng.stats["served_by_tenant"]["human"] == 2
+    clk.t = 1e12
+    eng.poll()
+    assert all(h.done for h in heavy)
+
+
+def test_slo_deadline_flushes_before_batching_deadline():
+    """A request's dispatch deadline is min(flush deadline, SLO deadline):
+    a tight SLO forces an earlier partial-bucket flush, and dispatches
+    past the SLO are counted per class."""
+    clk = _Clock()
+    eng = _engine(admission=_admission(), deadline_s=0.5, clock=clk)
+    h = eng.submit(cond=COND[0], seed=0, priority="interactive")  # slo 0.3
+    clk.t = 0.2
+    assert eng.poll() == 0 and not h.done
+    clk.t = 0.35                               # past SLO, before flush ddl
+    assert eng.poll() == 1 and h.done
+    assert eng.stats["slo_misses"] == {"interactive": 1}
+    # an explicit per-request SLO overrides the class default
+    h2 = eng.submit(cond=COND[1], seed=1, priority="interactive",
+                    slo_s=5.0)
+    clk.t = 0.75                               # 0.4s elapsed < slo 5.0
+    assert eng.poll() == 0 and not h2.done
+    clk.t = 0.9                                # flush deadline (0.5) wins
+    assert eng.poll() == 1 and h2.done
+    assert eng.stats["slo_misses"] == {"interactive": 1}   # h2 met its SLO
+
+
+def test_backpressure_bounds_inflight_and_retires_on_fetch():
+    """max_inflight bounds dispatched-but-unfetched batches: full buckets
+    queue while the window is full, and fetching a result opens the next
+    dispatch (continuous batching under backpressure)."""
+    clk = _Clock()
+    eng = _engine(deadline_s=1e9, clock=clk, max_inflight=1)
+    a = [eng.submit(cond=COND[i], seed=i) for i in range(4)]
+    b = [eng.submit(cond=COND[i], seed=10 + i) for i in range(4)]
+    assert all(h.done for h in a) and not any(h.done for h in b)
+    assert eng.stats["inflight"] == 1 and eng.pending() == 4
+    a[0].result()                              # retire -> pump
+    assert all(h.done for h in b)
+    assert eng.pending() == 0
+    # drain ignores the window: a promise to finish beats the policy
+    c = [eng.submit(cond=COND[i], seed=20 + i) for i in range(2)]
+    assert eng.drain() == 2 and all(h.done for h in c)
+
+
+def test_stats_snapshot_is_json_serializable():
+    """Regression: dispatches/compiled_shapes used tuple keys/values, so
+    the health endpoint could not json.dumps the snapshot."""
+    eng = _engine(step_tiers=(2, 3), admission=_admission())
+    eng.warmup()
+    eng.serve(COND, KEY)
+    eng.submit(cond=COND[0], seed=0, num_steps=2, priority="interactive",
+               tenant="acme")
+    eng.drain()
+    s = eng.stats
+    round_trip = json.loads(json.dumps(s))
+    assert round_trip == s
+    assert s["dispatches"] == {"b4/s3": 2, "b1/s2": 1}
+    assert set(s["warmed_shapes"]) >= {"b1/s2", "b4/s3"}
+    assert s["priorities"]["interactive"]["admitted"] == 1
+    assert s["served_by_tenant"] == {"default": 7, "acme": 1}
+    assert s["step_tiers"] == [2, 3]
 
 
 # ------------------------------------------------------------ warmup & cache
@@ -238,6 +477,20 @@ def test_warmup_pretraces_grid_so_serving_never_compiles():
     cold = _engine()
     cold.serve(COND, KEY)
     assert cold.stats["cold_dispatches"] == 1
+
+
+def test_warmup_covers_every_step_tier_by_default():
+    """The provably-never-compiles contract: submit only admits (cond
+    shape × step tier) combinations warmup pre-traced."""
+    eng = _engine(step_tiers=(2, 3))
+    report = eng.warmup()
+    assert set(report) == {"b1/s2", "b2/s2", "b4/s2",
+                           "b1/s3", "b2/s3", "b4/s3"}
+    for steps in (2, 3):
+        for i in range(5):
+            eng.submit(cond=COND[i], seed=i, num_steps=steps)
+    eng.drain()
+    assert eng.stats["cold_dispatches"] == 0
 
 
 def test_cond_cache_skips_encoder_for_repeat_prompts():
@@ -293,7 +546,7 @@ def test_trainer_attach_engine_end_to_end():
     assert np.isfinite(float(m["loss"]))
     assert np.isfinite(float(m["reward_mean"]))
     # 3 prompts x group 8 = 24 rollouts -> 3 capacity-8 chunks, no padding
-    assert eng.stats["dispatches"] == {(8, 3): 3}
+    assert eng.stats["dispatches"] == {"b8/s3": 3}
     # the engine rollout is the keyed primitive (jitted on both sides).
     # B=24-in-one-call vs three B=8 chunks may differ by reduction-order
     # ulps when XLA retiles matmuls at the larger shape (observed only
@@ -349,8 +602,176 @@ def test_engine_rollout_chunking_matches_single_dispatch():
     np.testing.assert_array_equal(np.asarray(traj.cond),
                                   np.asarray(direct.cond))
     # 6 = 4 + 2 -> second chunk rides the b2 tier, no padding at all
-    assert eng.stats["dispatches"] == {(4, 3): 1, (2, 3): 1}
+    assert eng.stats["dispatches"] == {"b4/s3": 1, "b2/s3": 1}
     assert eng.stats["padded_lanes"] == 0
+
+
+# --------------------------------------------------------- fuzz harness
+#
+# A deterministic seeded fuzzer over submit/poll/fetch/drain interleavings
+# against ONE warmed engine (shared module-scoped state keeps the compile
+# cache hot, exactly like a long-lived production process).  Invariants
+# checked after EVERY op and at episode end:
+#   * bounded queues: per-class depth never exceeds its admission limit
+#   * no starvation: after poll(), nothing past its deadline stays queued
+#   * per-request bit-identity: results equal a direct keyed rollout
+#   * cold_dispatches == 0 across the whole fuzzed load (post-warmup)
+# REPRO_FUZZ_SEEDS sizes the corpus (default 25 in tier-1; `make
+# fuzz-serve` runs 200).
+
+FUZZ_SEEDS = int(os.environ.get("REPRO_FUZZ_SEEDS", "25"))
+FUZZ_TENANTS = ("acme", "heavy", "solo")
+FUZZ_CLASSES = ("interactive", "standard", "batch", None)
+
+
+@pytest.fixture(scope="module")
+def fuzz_env():
+    clk = _Clock()
+    eng = _engine(
+        step_tiers=(2, 3), deadline_s=0.5, max_inflight=2, clock=clk,
+        admission=_admission(tenant_weights=(("heavy", 3),)))
+    eng.warmup()
+    direct = {
+        s: jax.jit(functools.partial(
+            lambda p, c, k, steps: rollout_keyed(
+                ADAPTER, p, c, k, SCHED, steps).x0, steps=s))
+        for s in (2, 3)}
+    return eng, clk, direct
+
+
+def _check_invariants(eng):
+    snap = eng.admission.snapshot()
+    for name, row in snap.items():
+        assert row["depth"] <= row["limit"], \
+            f"queue bound violated for {name}: {row}"
+    assert eng.pending() == sum(r["depth"] for r in snap.values())
+
+
+def _fuzz_episode(eng, clk, direct, seed):
+    rng = random.Random(seed)
+    live = []                                 # (handle, cond_idx, steps)
+    rejections = 0
+    for _ in range(rng.randint(6, 14)):
+        op = rng.random()
+        if op < 0.62:
+            i = rng.randrange(7)
+            steps = rng.choice((2, 3, None))
+            try:
+                h = eng.submit(
+                    cond=COND[i], seed=rng.randrange(1 << 30),
+                    num_steps=steps, tenant=rng.choice(FUZZ_TENANTS),
+                    priority=rng.choice(FUZZ_CLASSES),
+                    slo_s=rng.choice((None, 0.2, 0.8)))
+                live.append((h, i, steps or 3))
+            except RetryAfter as e:
+                rejections += 1
+                payload = e.to_json()
+                assert payload["error"] == "over_capacity"
+                assert payload["depth"] >= payload["limit"]
+                assert payload["retry_after_s"] >= 0
+        elif op < 0.88:
+            clk.t += rng.choice((0.0, 0.1, 0.3, 0.6))
+            eng.poll()
+            # no starvation: poll never leaves an expired request queued
+            for s in eng.admission.tiers():
+                assert not eng.admission.has_expired(s, clk.t)
+        else:
+            done = [h for h, _, _ in live if h.done]
+            if done:
+                rng.choice(done).result()      # retires in-flight slots
+        _check_invariants(eng)
+    clk.t += 1.0
+    eng.drain()
+    assert eng.pending() == 0
+    assert all(h.done for h, _, _ in live), "request starved to drain"
+    # fetch everything: materializing retires every in-flight slot, so the
+    # backpressure window is provably clean between episodes
+    for h, _, _ in live:
+        h.result()
+    assert eng.stats["inflight"] == 0
+    # per-request bit-identity to a direct keyed rollout of (cond, key)
+    for h, i, steps in rng.sample(live, min(3, len(live))):
+        want = direct[steps](PARAMS, COND[i:i + 1],
+                             np.asarray(h.key)[None])
+        np.testing.assert_array_equal(np.asarray(h.result()),
+                                      np.asarray(want)[0])
+    return rejections
+
+
+@pytest.mark.parametrize("seed", range(FUZZ_SEEDS))
+def test_fuzz_serving_interleavings(fuzz_env, seed):
+    eng, clk, direct = fuzz_env
+    _fuzz_episode(eng, clk, direct, seed)
+
+
+def test_fuzz_corpus_deadline_flush_races_full_bucket(fuzz_env):
+    """Known-tricky interleaving: requests already past their deadline
+    when a submit completes the bucket — the full-bucket dispatch at
+    submit must win (each request served exactly once), and the following
+    poll must find nothing left to flush."""
+    eng, clk, direct = fuzz_env
+    before = eng.stats["requests"]
+    h = [eng.submit(cond=COND[i], seed=1000 + i) for i in range(3)]
+    clk.t += 2.0                               # all three now expired
+    h.append(eng.submit(cond=COND[3], seed=1003))   # completes the bucket
+    assert all(x.done for x in h)              # dispatched at submit
+    assert eng.poll() == 0 and eng.pending() == 0
+    assert eng.stats["requests"] == before + 4
+    want = direct[3](PARAMS, COND[0:1], np.asarray(h[0].key)[None])
+    np.testing.assert_array_equal(np.asarray(h[0].result()),
+                                  np.asarray(want)[0])
+
+
+def test_fuzz_corpus_mixed_priorities_equal_arrival(fuzz_env):
+    """Known-tricky interleaving: one request per class in the same clock
+    tick; the deadline flush batches them together (same steps tier) and
+    every class is served — priority orders contention, it never drops."""
+    eng, clk, direct = fuzz_env
+    h = [eng.submit(cond=COND[i], seed=2000 + i, priority=p)
+         for i, p in enumerate(("interactive", "standard", "batch"))]
+    assert not any(x.done for x in h)
+    clk.t += 0.31                              # interactive SLO (0.3) first
+    eng.poll()
+    assert all(x.done for x in h)              # one b4 batch took all three
+    for i, x in enumerate(h):
+        want = direct[3](PARAMS, COND[i:i + 1], np.asarray(x.key)[None])
+        np.testing.assert_array_equal(np.asarray(x.result()),
+                                      np.asarray(want)[0])
+
+
+def test_fuzz_corpus_reject_then_retry(fuzz_env):
+    """Known-tricky interleaving: fill a class to its bound while the
+    in-flight window is saturated, get the structured rejection, flush,
+    and verify the retried submit serves bit-identically."""
+    eng, clk, direct = fuzz_env
+    clk.t += 10.0                              # quiesce prior deadlines
+    eng.drain()
+    blocker = []
+    while eng.stats["inflight"] < eng.max_inflight:
+        blocker += [eng.submit(cond=COND[i], seed=3000 + i,
+                               priority="standard") for i in range(4)]
+    queued = [eng.submit(cond=COND[i % 7], seed=3100 + i, priority="batch")
+              for i in range(5)]               # batch max_depth == 5
+    with pytest.raises(RetryAfter) as ei:
+        eng.submit(cond=COND[0], seed=3200, priority="batch")
+    clk.t += ei.value.retry_after_s + 1e-3     # honor the hint
+    eng.poll()
+    retry = eng.submit(cond=COND[0], seed=3200, priority="batch")
+    clk.t += 1.0
+    eng.poll()
+    assert retry.done and all(x.done for x in queued + blocker)
+    want = direct[3](PARAMS, COND[0:1], np.asarray(retry.key)[None])
+    np.testing.assert_array_equal(np.asarray(retry.result()),
+                                  np.asarray(want)[0])
+
+
+def test_fuzz_load_never_compiled(fuzz_env):
+    """Runs after the whole corpus (definition order): the entire fuzzed
+    load — every interleaving, tier mix, and tenant mix — hit only warmed
+    shapes, and the final stats snapshot still serializes."""
+    eng, _, _ = fuzz_env
+    assert eng.stats["cold_dispatches"] == 0
+    assert json.loads(json.dumps(eng.stats)) == eng.stats
 
 
 # ------------------------------------------------- multi-device (subprocess)
@@ -404,7 +825,7 @@ lat_4 = sharded.serve(cond, key)
 # device layouts (keys shard with their requests; no axis-index folds)
 np.testing.assert_array_equal(np.asarray(lat_1), np.asarray(lat_4))
 # the remainder (10 = 8 + 2) rode a padded dp-aligned bucket on the mesh
-assert sharded.stats["dispatches"] == {(8, 3): 1, (4, 3): 1}, \
+assert sharded.stats["dispatches"] == {"b8/s3": 1, "b4/s3": 1}, \
     sharded.stats["dispatches"]
 # trainer-path rollout equality as well (full Trajectory)
 t1 = single.rollout(params, cond[:8], key)
