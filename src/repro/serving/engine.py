@@ -18,7 +18,10 @@ Architecture (the production path the ROADMAP north star asks for):
   JSON-ready rejection with a deterministic ``retry_after_s``) instead of
   queueing unboundedly.  ``max_inflight`` bounds dispatched-but-unfetched
   batches, so backpressure propagates from slow consumers to rejections,
-  not to memory growth.
+  not to memory growth: deadline flushes bypass the cap only through a
+  bounded emergency window (at most ``2 * max_inflight`` per ``poll``),
+  and a batch whose handles are abandoned without being fetched retires
+  its slot on GC, so the window cannot leak shut.
 * **Shape buckets** bound jit recompiles on BOTH axes: batches are padded
   up to a fixed tier ladder (:class:`repro.serving.buckets.BucketGrid`)
   and ``num_steps`` is admitted only from the step-tier grid
@@ -52,6 +55,7 @@ from __future__ import annotations
 import itertools
 import math
 import time
+import weakref
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
@@ -61,7 +65,8 @@ import numpy as np
 
 from repro import distributed
 from repro.core.rollout import Trajectory, request_keys
-from repro.serving.admission import AdmissionConfig, AdmissionController
+from repro.serving.admission import (AdmissionConfig, AdmissionController,
+                                     RetryAfter)
 from repro.serving.buckets import BucketGrid, StepGrid
 
 # distinct auto-key stream per engine instance: auto keys are
@@ -69,31 +74,47 @@ from repro.serving.buckets import BucketGrid, StepGrid
 # user PRNGKey(seed) submissions nor with another engine's auto keys
 _AUTO_KEY_BASE = 0x466C6F77            # "Flow"
 _ENGINE_SEQ = itertools.count()
+# auto keys are fetched to host in blocks of this many rids: one device
+# round-trip amortized over the block, not one per submit
+_AUTO_KEY_BLOCK = 256
 
 
 class _BatchResult:
     """Shared result holder for one dispatched bucket: keeps the device
     array unmaterialized (dispatches stay async — the next batch's queue
     work overlaps this one's compute) and pays the device->host copy once
-    per BATCH on first access, never per request.  Materializing retires
-    the batch's in-flight slot (``on_materialize``) — the backpressure
-    signal that lets the engine dispatch the next queued bucket."""
+    per BATCH on first access, never per request.  The batch's in-flight
+    slot retires on materialization OR on GC, whichever comes first
+    (``weakref.finalize``): a client that abandons its handles after
+    dispatch (timeout, disconnect) must not pin a ``max_inflight`` slot
+    forever."""
 
-    __slots__ = ("_dev", "_np", "_retire")
+    __slots__ = ("_dev", "_np", "_retire", "__weakref__")
 
     def __init__(self, x0_dev: jax.Array,
                  on_materialize: Optional[Callable[[], None]] = None):
         self._dev = x0_dev
         self._np: Optional[np.ndarray] = None
-        self._retire = on_materialize
+        if on_materialize is None:
+            self._retire = None
+        else:
+            cell = [on_materialize]
+
+            def retire_once():
+                if cell:
+                    cell.pop()()
+
+            self._retire = retire_once
+            # the callback closes over the cell, never over self — a
+            # finalizer referencing its own object would keep it alive
+            weakref.finalize(self, retire_once)
 
     def row(self, i: int) -> np.ndarray:
         if self._np is None:
             self._np = np.asarray(self._dev)
             self._dev = None
             if self._retire is not None:
-                retire, self._retire = self._retire, None
-                retire()
+                self._retire()
         return self._np[i]
 
 
@@ -209,10 +230,13 @@ class ServingEngine:
         self.grid = BucketGrid(buckets, max_batch=max_batch, dp=dp)
         self.admission = AdmissionController(admission)
         self.cond_cache = CondCache(cond_cache_entries)
-        # one-time constructor sync, not a hot path: the base key must be
-        # host-side so per-request fold_in never touches a device array
-        self._base_key = np.asarray(jax.random.fold_in(  # jaxlint: disable=R002 — one-time __init__ fetch, submit() folds from host memory
+        # one-time constructor sync, not a hot path: submit() reads auto
+        # keys from host-side blocks (_auto_key, one fetch per
+        # _AUTO_KEY_BLOCK rids), never folding on-device per request
+        self._base_key = np.asarray(jax.random.fold_in(  # jaxlint: disable=R002 — one-time __init__ fetch; the queue path reads precomputed host blocks
             jax.random.PRNGKey(_AUTO_KEY_BASE), next(_ENGINE_SEQ)))
+        self._auto_keys: Optional[np.ndarray] = None   # block cache ...
+        self._auto_start = 0                           # ... starts at rid
         # one jitted executor per (num_steps, x0_only) tier; jit's shape
         # cache then holds one executable per bucket size underneath it.
         # The queue path uses the x0-only variant (XLA drops the stacked
@@ -306,8 +330,7 @@ class ServingEngine:
                 # fold_in from the per-engine base key: never collides
                 # with a user PRNGKey(seed) and never repeats across
                 # engine instances (PRNGKey(rid) did both)
-                key = jax.random.fold_in(
-                    jnp.asarray(self._base_key), self._next_rid)
+                key = self._auto_key(self._next_rid)
         key = np.asarray(key)
         if slo_s is not None and slo_s <= 0:
             raise ValueError(f"slo_s must be > 0, got {slo_s}")
@@ -323,6 +346,20 @@ class ServingEngine:
         self.counters["requests"] += 1
         self._pump(now)
         return req
+
+    def _auto_key(self, rid: int) -> np.ndarray:
+        """Auto key for ``rid``: ``fold_in(base_key, rid)``, served from a
+        host-side block precomputed ``_AUTO_KEY_BLOCK`` rids at a time —
+        one device round-trip per block, zero on the per-submit path."""
+        if (self._auto_keys is None
+                or not (self._auto_start <= rid
+                        < self._auto_start + len(self._auto_keys))):
+            base = jnp.asarray(self._base_key)
+            rids = jnp.arange(rid, rid + _AUTO_KEY_BLOCK, dtype=jnp.uint32)
+            self._auto_keys = np.asarray(  # jaxlint: disable=R002 — one fetch per _AUTO_KEY_BLOCK submits, amortized off the hot path
+                jax.vmap(lambda r: jax.random.fold_in(base, r))(rids))
+            self._auto_start = rid
+        return self._auto_keys[rid - self._auto_start]
 
     def _pump(self, now: float) -> int:
         """Continuous batching under backpressure: dispatch full buckets
@@ -340,17 +377,24 @@ class ServingEngine:
         return n
 
     def poll(self) -> int:
-        """Flush every queue holding a request past its dispatch deadline
-        (the batching flush deadline or its SLO deadline, whichever came
-        first) — deadline flushes bypass the in-flight cap: a deadline is
-        a promise, backpressure is a policy.  Then dispatch any full
-        buckets the freed queues allow.  Returns requests dispatched."""
+        """Flush queues holding a request past its dispatch deadline (the
+        batching flush deadline or its SLO deadline, whichever came
+        first) — deadline flushes bypass the in-flight cap, but through a
+        *bounded* emergency window: at most ``2 * max_inflight`` deadline
+        dispatches per call, so a burst of expired deadlines (slow
+        consumer + short SLOs) drains over successive polls instead of
+        materializing unbounded in-flight device batches at once.  Then
+        dispatch any full buckets the freed queues allow.  Returns
+        requests dispatched."""
         now = self.clock()
         n = 0
+        flushes, flush_cap = 0, 2 * self.max_inflight
         for steps in list(self.admission.tiers()):
-            while self.admission.has_expired(steps, now):
+            while (flushes < flush_cap
+                   and self.admission.has_expired(steps, now)):
                 batch = self.admission.take(steps, self.grid.capacity, now)
                 self._dispatch(batch)
+                flushes += 1
                 n += len(batch)
         n += self._pump(now)
         return n
@@ -462,7 +506,14 @@ class ServingEngine:
         """Synchronous batch serve: prompts (via the cond cache) or a
         (N, Lc, D) cond array -> (N, Lt, ld) latents.  Request i's key is
         ``fold_in(key, i)`` — per-request results are independent of N,
-        bucket layout, and max_batch."""
+        bucket layout, and max_batch.
+
+        The caller IS the consumer here, so serve() drives its own queue:
+        when admission pushes back (:class:`RetryAfter`), it flushes the
+        backlog and materializes finished batches (retiring their
+        in-flight slots) before resubmitting — any N serves under the
+        same bounded queues and bounded device memory as the async path,
+        with no handle ever abandoned."""
         if key is None:
             key = jax.random.PRNGKey(0)
         if len(requests) == 0:
@@ -474,10 +525,22 @@ class ServingEngine:
         else:
             cond = np.asarray(requests)
         keys = np.asarray(request_keys(key, cond.shape[0]))
-        handles = [self.submit(cond=cond[i], key=keys[i],
-                               num_steps=num_steps, tenant=tenant,
-                               priority=priority)
-                   for i in range(cond.shape[0])]
+        handles: List[Request] = []
+        for i in range(cond.shape[0]):
+            while True:
+                try:
+                    handles.append(self.submit(
+                        cond=cond[i], key=keys[i], num_steps=num_steps,
+                        tenant=tenant, priority=priority))
+                    break
+                except RetryAfter:
+                    # full queue + full in-flight window: dispatch the
+                    # backlog, then materialize what finished so slots
+                    # retire and the resubmit is admitted
+                    self.drain()
+                    for h in handles:
+                        if h.done:
+                            h.result()
         self.drain()
         return jnp.asarray(np.stack([h.result() for h in handles]))
 

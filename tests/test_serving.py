@@ -9,6 +9,7 @@ deterministic seeded fuzz harness over submit/poll/fetch/drain
 interleavings (``REPRO_FUZZ_SEEDS`` scales the corpus; ``make fuzz-serve``
 runs 200)."""
 import functools
+import gc
 import json
 import os
 import random
@@ -148,6 +149,25 @@ def test_serve_empty_request_list_returns_empty_batch():
     lat = eng.serve(np.zeros((0, 4, 512), np.float32), KEY)
     assert lat.shape == (0, 8, 8)
     assert eng.stats["requests"] == 0 and eng.stats["dispatches"] == {}
+
+
+def test_serve_drives_queue_past_admission_bounds():
+    """Regression: a synchronous serve() of more requests than
+    max_inflight*capacity + the class depth bound used to raise RetryAfter
+    from inside its submit loop (no result materializes during the loop,
+    so in-flight slots never retire and the queue fills), abandoning the
+    already-dispatched handles — serve() now drives its own queue on
+    backpressure, so any N serves, bit-identically per request."""
+    eng = _engine(max_inflight=1, admission=_admission())
+    # bound before the fix: 1 inflight * capacity 4 + standard depth 6 = 10
+    cond = jax.random.normal(jax.random.PRNGKey(3), (24, 4, 512),
+                             jnp.float32)
+    lat = eng.serve(cond, KEY)
+    assert lat.shape == (24, 8, 8)
+    assert eng.pending() == 0
+    # per-request bit-identity with an unconstrained engine's serve
+    lat2 = _engine().serve(cond, KEY)
+    np.testing.assert_array_equal(np.asarray(lat), np.asarray(lat2))
 
 
 def test_per_request_determinism_across_batching():
@@ -309,6 +329,21 @@ def test_auto_keys_do_not_collide_with_seeds_or_across_engines():
                                   np.asarray(h_seed2.result()))
 
 
+def test_auto_key_blocks_match_fold_in_chain():
+    """Regression: auto keys used to fold on-device per submit (a blocking
+    host<->device round-trip on the queue hot path) — they now come from
+    host-side blocks, bit-identical to fold_in(base, rid) within and
+    across block boundaries."""
+    from repro.serving.engine import _AUTO_KEY_BLOCK
+    eng = _engine()
+    base = jnp.asarray(eng._base_key)
+    for rid in (0, 1, _AUTO_KEY_BLOCK - 1, _AUTO_KEY_BLOCK,
+                3 * _AUTO_KEY_BLOCK + 5):
+        np.testing.assert_array_equal(
+            np.asarray(eng._auto_key(rid)),
+            np.asarray(jax.random.fold_in(base, rid)))
+
+
 # ------------------------------------------- multi-tenant admission control
 
 def _admission(**kw):
@@ -347,9 +382,10 @@ def test_over_capacity_submit_rejected_with_structured_retry_after():
     clk = _Clock()
     eng = _engine(admission=_admission(), deadline_s=0.5, clock=clk,
                   max_inflight=1)
-    # occupy the only in-flight slot so queues actually build up
-    for i in range(4):
-        eng.submit(cond=COND[i], seed=i)
+    # occupy the only in-flight slot so queues actually build up (the
+    # handles must stay referenced: dropping them would retire the slot
+    # via the GC-reclamation path)
+    blockers = [eng.submit(cond=COND[i], seed=i) for i in range(4)]
     assert eng.stats["inflight"] == 1
     handles = [eng.submit(cond=COND[i % 7], seed=10 + i, priority="batch")
                for i in range(5)]              # batch max_depth == 5
@@ -372,7 +408,7 @@ def test_over_capacity_submit_rejected_with_structured_retry_after():
     h = eng.submit(cond=COND[0], seed=99, priority="batch")
     clk.t = 2.0
     eng.poll()
-    assert h.done and all(x.done for x in handles)
+    assert h.done and all(x.done for x in handles + blockers)
 
 
 def test_weighted_fair_dequeue_across_tenants_and_classes():
@@ -440,6 +476,50 @@ def test_backpressure_bounds_inflight_and_retires_on_fetch():
     # drain ignores the window: a promise to finish beats the policy
     c = [eng.submit(cond=COND[i], seed=20 + i) for i in range(2)]
     assert eng.drain() == 2 and all(h.done for h in c)
+
+
+def test_abandoned_handles_release_inflight_slots_on_gc():
+    """Regression: an in-flight slot used to retire only inside result(),
+    so handles abandoned after dispatch (client timeout/disconnect — there
+    is no cancel API) consumed max_inflight forever, after which full
+    buckets only ever moved via deadline flushes — the slot now retires on
+    GC of the batch's result holder, whichever of fetch/GC comes first."""
+    clk = _Clock()
+    eng = _engine(deadline_s=1e9, clock=clk, max_inflight=1)
+    abandoned = [eng.submit(cond=COND[i], seed=i) for i in range(4)]
+    assert all(h.done for h in abandoned)
+    assert eng.stats["inflight"] == 1
+    queued = [eng.submit(cond=COND[i], seed=10 + i) for i in range(4)]
+    assert not any(h.done for h in queued)     # window full, bucket queued
+    del abandoned                              # client walked away
+    gc.collect()
+    # the freed slot pumped the queued full bucket immediately
+    assert all(h.done for h in queued)
+    assert eng.stats["inflight"] == 1
+    queued[0].result()
+    assert eng.stats["inflight"] == 0
+
+
+def test_poll_deadline_flush_bounded_per_call():
+    """Regression: deadline flushes bypass max_inflight, but used to do so
+    unboundedly — a burst of expired deadlines (slow consumer + short
+    slo_s) could materialize any number of in-flight device batches in a
+    single poll, reintroducing the memory growth the backpressure window
+    exists to prevent.  The emergency window is now capped at
+    2*max_inflight dispatches per call; the backlog drains over
+    successive polls."""
+    clk = _Clock()
+    eng = _engine(deadline_s=0.1, clock=clk, max_inflight=1)
+    blocker = [eng.submit(cond=COND[i], seed=i) for i in range(4)]
+    assert all(h.done for h in blocker) and eng.stats["inflight"] == 1
+    burst = [eng.submit(cond=COND[i % 7], seed=100 + i) for i in range(12)]
+    clk.t = 1.0                                # every burst request expired
+    eng.poll()
+    # exactly 2 * max_inflight = 2 emergency batches (capacity 4) went out
+    assert sum(h.done for h in burst) == 8
+    assert eng.stats["inflight"] == 3 and eng.pending() == 4
+    eng.poll()                                 # the next poll drains the rest
+    assert all(h.done for h in burst) and eng.pending() == 0
 
 
 def test_stats_snapshot_is_json_serializable():
@@ -613,7 +693,9 @@ def test_engine_rollout_chunking_matches_single_dispatch():
 # cache hot, exactly like a long-lived production process).  Invariants
 # checked after EVERY op and at episode end:
 #   * bounded queues: per-class depth never exceeds its admission limit
-#   * no starvation: after poll(), nothing past its deadline stays queued
+#   * no starvation: polling clears every expired request in a bounded
+#     number of calls (each poll's emergency flush window is capped at
+#     2*max_inflight dispatches, so one call may leave a burst's tail)
 #   * per-request bit-identity: results equal a direct keyed rollout
 #   * cold_dispatches == 0 across the whole fuzzed load (post-warmup)
 # REPRO_FUZZ_SEEDS sizes the corpus (default 25 in tier-1; `make
@@ -672,9 +754,15 @@ def _fuzz_episode(eng, clk, direct, seed):
         elif op < 0.88:
             clk.t += rng.choice((0.0, 0.1, 0.3, 0.6))
             eng.poll()
-            # no starvation: poll never leaves an expired request queued
-            for s in eng.admission.tiers():
-                assert not eng.admission.has_expired(s, clk.t)
+            # no starvation: each poll's emergency flush window is
+            # bounded, so the *sequence* of polls must clear every
+            # expired request, each call making progress
+            polls = 1
+            while any(eng.admission.has_expired(s, clk.t)
+                      for s in eng.admission.tiers()):
+                assert eng.poll() > 0, "expired request starved"
+                polls += 1
+                assert polls <= 64, "deadline backlog never drained"
         else:
             done = [h for h, _, _ in live if h.done]
             if done:
