@@ -10,6 +10,8 @@
 #                      front door (launch CLI + config-file path)
 #   make smoke-dist  - same, sharded over 4 faked CPU devices with
 #                      gradient-accumulation microbatching
+#   make smoke-dist-2d - same on the 2-D dp=2×mp=2 mesh (FSDP/expert/head
+#                      sharding per the PartitionPlan)
 #   make test-serve  - serving engine suite on 4 faked devices + the
 #                      sharded serve CLI end-to-end
 #   make fuzz-serve  - 200 seeded submit/poll/fetch/drain interleavings
@@ -21,7 +23,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 DIST_FLAGS := --xla_force_host_platform_device_count=4
 
 .PHONY: verify deps-check lint test test-interpret test-dist test-serve \
-	test-perf-dist fuzz-serve smoke smoke-dist bench-train
+	test-perf-dist fuzz-serve smoke smoke-dist smoke-dist-2d bench-train
 
 verify: deps-check lint test test-interpret test-dist test-serve \
 	test-perf-dist fuzz-serve
@@ -48,15 +50,17 @@ test-interpret:
 	REPRO_PALLAS=interpret $(PY) -m pytest -x -q tests/test_kernels.py \
 	    tests/test_trainers.py -k "not reward_improves"
 
-# Data-parallel configuration: the in-process distributed tests re-run ON
+# Distributed configuration: the in-process distributed tests re-run ON
 # 4 faked host devices (the subprocess equivalence tests are deselected —
 # they spawn their own 4-device children and already ran in `make test`),
-# then the sharded + microbatched launch CLI end-to-end.
+# then the sharded + microbatched launch CLI end-to-end, in both mesh
+# layouts: 1-D dp=4 and 2-D dp=2×mp=2.
 test-dist:
 	XLA_FLAGS="$(DIST_FLAGS)" $(PY) -m pytest -x -q \
 	    tests/test_distributed.py \
-	    -k "not sharded_training and not shard_map"
+	    -k "not sharded_training and not shard_map and not two_axis and not portable"
 	$(MAKE) smoke-dist
+	$(MAKE) smoke-dist-2d
 
 # Serving engine: the suite re-run ON 4 faked host devices (the sharded
 # subprocess test is deselected — it spawns its own 4-device child and
@@ -104,3 +108,14 @@ smoke-dist:
 	    --steps 2 --set dist.data_parallel=4 --set dist.microbatch=2 \
 	    --set flow.cache_dir=/tmp/repro-smoke-dist/cache \
 	    --set loop.ckpt_dir=/tmp/repro-smoke-dist/ckpt
+
+# 2-D mesh smoke: dp=2 × mp=2 on 4 faked devices, params/moments sharded
+# over the model axis per the PartitionPlan (perf.log_memory surfaces the
+# per-device state bytes)
+smoke-dist-2d:
+	rm -rf /tmp/repro-smoke-dist-2d
+	XLA_FLAGS="$(DIST_FLAGS)" $(PY) -m repro.launch.train --reduced \
+	    --steps 2 --set dist.data_parallel=2 --set dist.model_parallel=2 \
+	    --set perf.log_memory=true \
+	    --set flow.cache_dir=/tmp/repro-smoke-dist-2d/cache \
+	    --set loop.ckpt_dir=/tmp/repro-smoke-dist-2d/ckpt

@@ -15,7 +15,7 @@ def main() -> None:
         ("reward_curves (paper Fig 2)", reward_curves.run),
         ("preprocessing (paper Table 2)", preprocessing.run),
         ("roofline (deliverable g)", roofline.run),
-        ("scaling (repro.distributed data-parallel)", scaling.run),
+        ("scaling (repro.distributed mesh layouts)", scaling.run),
         ("serving (repro.serving bucketed engine)", serving.run),
         ("train_step (repro.perf remat/fused policies)", train_step.run),
     ]

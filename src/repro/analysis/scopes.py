@@ -11,10 +11,16 @@ Construction, all stdlib ``ast``:
 1. **Index** every function/method/lambda and class across the linted
    modules (nested defs are first-class nodes; classes record which methods
    assign which ``self.<attr>`` — R003's mutation map).
-2. **Wrapper positions**: a repo function whose parameter flows directly
-   into a tracing call (``def jit_sample(fn, mesh): return jax.jit(fn,...)``)
+2. **Wrapper positions**: a repo function whose parameter flows into a
+   tracing call (``def jit_update(fn, mesh): return jax.jit(fn,...)``)
    traces that argument position at every call site — this is how the
    ``distributed.jit_*`` indirection layer stays visible to the linter.
+   Detection is *transitive* to a fixed point: a parameter forwarded into
+   another wrapper's traced position (``def jit_sample(fn, ...): return
+   _plan_jit(fn, ...)``) makes the forwarding function a wrapper too, and
+   donation marks (``donate_argnums`` inside the innermost jit) propagate
+   up the same chain, so R005's donated-buffer tracking follows the
+   helper indirection.
 3. **Roots**: every function passed to a tracing call / decorator
    (including ``functools.partial(jax.jit, ...)`` and wrapper call sites).
 4. **Edges**: calls resolved by name — ``self.x`` binds within the class
@@ -250,7 +256,14 @@ class ScopeGraph:
     # ------------------------------------------------------------- wrappers
     def _find_wrappers(self) -> None:
         """Functions whose parameter flows into a tracing call: calling
-        them traces that argument (the ``distributed.jit_*`` layer)."""
+        them traces that argument (the ``distributed.jit_*`` layer).
+
+        Runs to a fixed point so the property is transitive: a parameter
+        forwarded into an already-known wrapper's traced position makes
+        the forwarding function a wrapper at that position too, and the
+        callee's donation marks are inherited (donated positions index the
+        *wrapped function's* arguments, so they are layout-stable across
+        forwarding layers)."""
         for fi in list(self.functions.values()):
             if not isinstance(fi.node, (ast.FunctionDef,
                                         ast.AsyncFunctionDef)):
@@ -269,6 +282,49 @@ class ScopeGraph:
                         self.wrapper_donates.setdefault(
                             id(fi.node), set()).update(
                             _donated_positions(n))
+        # transitive closure over wrapper-to-wrapper forwarding
+        changed = True
+        while changed:
+            changed = False
+            for fi in list(self.functions.values()):
+                if not isinstance(fi.node, (ast.FunctionDef,
+                                            ast.AsyncFunctionDef)):
+                    continue
+                params = fi.params[1:] if fi.is_method else fi.params
+                for n in shallow_walk(fi.node):
+                    if not isinstance(n, ast.Call):
+                        continue
+                    for callee in self.resolve_call(n, fi.module, fi):
+                        if self._inherit_wrapper(fi, params, n, callee):
+                            changed = True
+
+    def _inherit_wrapper(self, fi: FuncInfo, params: List[str],
+                         call: ast.Call, callee: FuncInfo) -> bool:
+        """Propagate ``callee``'s wrapper marks onto ``fi`` when one of
+        ``fi``'s parameters is forwarded positionally into a traced
+        position of ``callee``.  Returns True when anything new landed."""
+        positions = self.wrapper_positions.get(id(callee.node))
+        if not positions or callee.node is fi.node:
+            return False
+        changed = False
+        for idx in positions:
+            if idx >= len(call.args):
+                continue
+            arg = call.args[idx]
+            if not (isinstance(arg, ast.Name) and arg.id in params):
+                continue
+            p = params.index(arg.id)
+            wp = self.wrapper_positions.setdefault(id(fi.node), set())
+            if p not in wp:
+                wp.add(p)
+                changed = True
+            donated = self.wrapper_donates.get(id(callee.node))
+            if donated:
+                wd = self.wrapper_donates.setdefault(id(fi.node), set())
+                if not donated <= wd:
+                    wd |= donated
+                    changed = True
+        return changed
 
     # ------------------------------------------------------ class families
     def family(self, class_name: str) -> Set[str]:

@@ -95,7 +95,8 @@ class Experiment:
         ap.add_argument("--steps", type=int, default=None)
         ap.add_argument("--set", dest="overrides", action="append",
                         default=[], metavar="DOTTED.PATH=VALUE",
-                        help="typed config override, e.g. --set flow.eta=0.5")
+                        help="typed config override, e.g. --set flow.eta=0.5 "
+                             "or --set dist.model_parallel=2")
         return ap
 
     @classmethod
@@ -209,8 +210,10 @@ class Experiment:
         """``params`` priority: explicit argument > this Experiment's
         trained state (if ``train()`` ran) > fresh init.  The sampler's
         engine shards inference over ``cfg.dist`` (``data_parallel>1``
-        builds the "data" mesh; per-request output is bit-identical to
-        single-device).  ``step_tiers`` is the admitted num_steps quality
+        shards requests over the mesh's "data" axis with per-request
+        output bit-identical to single-device; ``model_parallel>1`` keeps
+        params model-sharded per the PartitionPlan, f32-rounding-equal).
+        ``step_tiers`` is the admitted num_steps quality
         ladder; ``admission`` an :class:`repro.serving.AdmissionConfig`
         (priority classes, tenant weights, bounded queues)."""
         from repro import distributed
@@ -222,12 +225,17 @@ class Experiment:
                            params=params, buckets=buckets,
                            step_tiers=step_tiers, deadline_s=deadline_s,
                            admission=admission, max_inflight=max_inflight,
-                           mesh=distributed.data_mesh(self.cfg.dist),
+                           mesh=distributed.train_mesh(self.cfg.dist),
                            provider=provider, cond_len=self.cond_len)
 
     def describe(self) -> Dict[str, Any]:
-        """Resolved-component summary (uses ``registry.describe``)."""
+        """Resolved-component summary (uses ``registry.describe``).  The
+        ``dist`` entry shows the resolved 2-D mesh layout — how
+        ``--set dist.data_parallel=2 --set dist.model_parallel=2`` landed
+        against the local device count."""
+        from repro import distributed
         f = self.cfg.flow
+        dp, mp = distributed.resolve_axes(self.cfg.dist)
         return {
             "arch": {"name": self.arch.name, "family": self.arch.family,
                      "n_params": self.arch.n_params()},
@@ -237,6 +245,9 @@ class Experiment:
             "optimizer": registry.describe("optimizer",
                                            self.cfg.optim.optimizer),
             "dataset": registry.describe("dataset", self.cfg.data.dataset),
+            "dist": {"devices": jax.local_device_count(),
+                     "data_parallel": dp, "model_parallel": mp,
+                     "microbatch": self.cfg.dist.microbatch},
         }
 
     # ---------------------------------------------------------------- train
@@ -245,8 +256,9 @@ class Experiment:
         resumable.  Loop knobs and schedule length (``--steps`` extends a
         run, moving loop.steps + optim.total_steps/warmup_steps) may
         legitimately change between restarts, as may the device layout
-        (``dist`` — a checkpoint written at one data_parallel/microbatch
-        resumes at any other, and ``perf`` — remat/fusion/precision are
+        (``dist`` — a checkpoint written at one
+        data_parallel×model_parallel/microbatch layout resumes at any
+        other, and ``perf`` — remat/fusion/precision are
         performance policy, not what is being trained); everything else —
         arch, trainer, rewards, dynamics, data — is guarded against
         silently resuming someone else's state."""
@@ -337,7 +349,10 @@ class Experiment:
                     "loop.resume=false or point loop.ckpt_dir elsewhere"
                 ) from None
             if step is not None:
-                trainer.state = state
+                # checkpoints are canonical (unsharded) on disk; re-place
+                # under this trainer's PartitionPlan so a dp=4 run resumes
+                # cleanly at dp=2×mp=2 (or any other layout)
+                trainer.state = trainer.place_state(state)
                 start_step = step
                 print(f"[resume] restored full RLState at step {step} "
                       f"from {lc.ckpt_dir}", flush=True)

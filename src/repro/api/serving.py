@@ -5,7 +5,9 @@
 scheduler resolution and delegates every batch to the engine, so the
 historical ``serve(cond, key)`` call sites keep working while gaining
 bucketed batching, compile-cache warmup, and (with a mesh) sharded
-inference.  Per-request keys are ``fold_in(key, i)`` — request i's latent
+inference — data-sharded requests, and model-sharded params when the mesh
+has a "model" axis (the engine self-builds the PartitionPlan from the
+adapter spec).  Per-request keys are ``fold_in(key, i)`` — request i's latent
 is identical whatever ``max_batch``, bucket layout, or device count is in
 effect.
 """

@@ -286,16 +286,26 @@ class ShardingConfig:
 
 @dataclass(frozen=True)
 class DistConfig:
-    """Data-parallel training layout (``repro.distributed``).
+    """Distributed training layout (``repro.distributed``): a 2-D
+    ``("data", "model")`` device mesh.
 
     ``data_parallel``: device count on the mesh "data" axis — prompts×groups
     batches are sharded over it. 1 (default) is the single-device path (no
-    mesh is built); 0 means "all local devices".  ``microbatch``: split each
-    ``group_size × num_prompts`` batch into this many sequential
+    mesh is built); 0 means "all local devices *not* claimed by
+    model_parallel".  ``model_parallel``: device count on the "model" axis —
+    params and AdamW moments are sharded over it per the ``PartitionPlan``
+    (FSDP-style for dense backbone leaves, expert-parallel for MoE tables,
+    head-parallel for attention/MLA projections); 1 (default) replicates
+    params exactly as the historical 1-D path did, 0 means "all devices not
+    claimed by data_parallel".  ``dp × mp`` is validated against
+    ``jax.local_device_count()`` at mesh construction.  ``microbatch``:
+    split each ``group_size × num_prompts`` batch into this many sequential
     gradient-accumulation chunks (0/1 = one full-batch pass).  These are
     runtime choices, not experiment identity: a checkpoint written at one
-    layout resumes at any other."""
+    layout resumes at any other (e.g. ``dp=4`` → ``dp=2×mp=2``) through the
+    canonical unsharded on-disk layout."""
     data_parallel: int = 1
+    model_parallel: int = 1
     microbatch: int = 0
     # donate the RLState buffers to the jitted update (params + AdamW
     # moments rewritten in place instead of double-buffered)

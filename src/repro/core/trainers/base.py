@@ -74,7 +74,7 @@ class BaseTrainer:
                 "statistics and cannot be microbatched: chunked gradient "
                 "accumulation would make them chunk-local and change the "
                 "training math — set dist.microbatch=0")
-        self.mesh = distributed.data_mesh(self.dist)
+        self.mesh = distributed.train_mesh(self.dist)
         self.adapter = FlowAdapter(
             arch_cfg, flow_cfg, cond_dim,
             policy_dtype=perf_lib.resolve_policy_dtype(self.perf))
@@ -93,22 +93,42 @@ class BaseTrainer:
         k_p, k_r = jax.random.split(key)
         params = params_lib.init(self.adapter.spec(), k_p, dtype)
         self.optimizer = registry.build("optimizer", opt_cfg.optimizer)
-        self.state = RLState(params, self.optimizer.init(params))
-        if self.mesh is not None:     # replicate state onto the data mesh
-            self.state = jax.device_put(
-                self.state, distributed.replicated(self.mesh))
+        # the PartitionPlan maps every param leaf (and the AdamW moments
+        # mirroring it) to a mesh layout — replicated at mp=1, FSDP/expert/
+        # head-sharded over "model" otherwise (repro.distributed.sharding)
+        self.plan = distributed.partition_plan(self.mesh,
+                                               self.adapter.spec())
+        self.state = self.place_state(
+            RLState(params, self.optimizer.init(params)))
+        self.params_sharding = (None if self.plan is None
+                                else self.plan.param_shardings())
+        self.state_sharding = (None if self.plan is None
+                               else self.plan.state_shardings(self.state))
         specs = flow_cfg.rewards or DEFAULT_REWARDS
         self.loader = MultiRewardLoader(specs, k_r)
         self._lr = optim.make_schedule(opt_cfg)
         self._engine = None
-        self._sample_jit = distributed.jit_sample(self._sample, self.mesh)
+        self._sample_jit = distributed.jit_sample(self._sample, self.mesh,
+                                                  self.params_sharding)
         self._update_jit = distributed.jit_update(
-            self._update, self.mesh,
-            donate=self.dist.donate_state and self.donate_state_ok)
+            self._update, self.mesh, self.state_sharding,
+            donate=self.dist.donate_state and self.donate_state_ok,
+            extras_sharding=self.update_extras_sharding())
         self._rewards_jit = distributed.jit_rewards(functools.partial(
             self._rewards, group_size=flow_cfg.group_size), self.mesh)
         self._fused_jit = (perf_lib.make_fused_step(self)
                            if self.perf.fuse_step else None)
+
+    def place_state(self, state: RLState) -> RLState:
+        """Lay a canonical (host/unsharded) RLState out for this trainer's
+        mesh per the PartitionPlan — replicated at ``mp=1``, model-sharded
+        otherwise; identity on the single-device path.  Used at init and by
+        checkpoint restore (``Experiment.train``), which is what makes
+        layouts a runtime choice: a checkpoint written under ``dp=4``
+        resumes under ``dp=2×mp=2`` by re-placing here."""
+        if self.mesh is None:
+            return state
+        return jax.device_put(state, self.plan.state_shardings(state))
 
     # ------------------------------------------------------------- sampling
     def attach_engine(self, engine) -> None:
@@ -202,6 +222,13 @@ class BaseTrainer:
         entries derived from ``self.state`` see the behavior policy."""
         return ()
 
+    def update_extras_sharding(self):
+        """Mesh layout of the ``update_extras()`` tuple for the jitted
+        update — None replicates.  Trainers whose extras alias param-shaped
+        trees (NFT's ref_params) override this so the update jit accepts
+        them in their placed (model-sharded) layout under ``mp>1``."""
+        return None
+
     def _update(self, state: RLState, traj: Trajectory, adv: jax.Array,
                 key: jax.Array, extras: Tuple = ()
                 ) -> Tuple[RLState, Dict[str, jax.Array]]:
@@ -267,8 +294,11 @@ class BaseTrainer:
     def memory_stats(self, cond: jax.Array) -> Dict[str, Dict]:
         """``compiled.memory_analysis()`` byte counts of the jitted update
         (and the fused step, when enabled) for a (P, Lc, cond_dim) prompt
-        batch — see ``repro.perf.memory``.  AOT introspection only: nothing
-        runs, no live buffer is donated."""
+        batch, plus a ``"state"`` entry with the RLState's canonical total
+        vs per-device bytes under the active PartitionPlan — the FSDP
+        memory win, visible in ``perf.log_memory``.  See
+        ``repro.perf.memory``.  AOT introspection only: nothing runs, no
+        live buffer is donated."""
         return perf_lib.update_memory(self, cond)
 
     def sample_timesteps(self, key: jax.Array, batch: int) -> jax.Array:

@@ -53,6 +53,12 @@ class DiffusionNFTTrainer(BaseTrainer):
         self.ref_params = self.state.params    # behavior policy this round
         return (self.ref_params,)
 
+    def update_extras_sharding(self):
+        # ref_params alias the placed live params, so under mp>1 they reach
+        # the update jit model-sharded per the PartitionPlan, not replicated
+        return (None if self.params_sharding is None
+                else (self.params_sharding,))
+
     def loss_fn(self, params, traj: Trajectory, adv: jax.Array,
                 key: jax.Array, ref_params=None
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:

@@ -1,32 +1,46 @@
-"""``repro.distributed`` — data-parallel training subsystem.
+"""``repro.distributed`` — the distributed-training subsystem.
 
-The ROADMAP north-star's first scaling axis: a ``jax.sharding.Mesh`` with a
-single "data" dimension over prompts×groups, sharded jit entry points for
-the trainer's sample/rewards/update (``sharding``), sequential
-gradient-accumulation microbatching (``microbatch``), and a ``shard_map``
-per-device rollout for communication-free generation (``shard``).
+The ROADMAP north-star's scaling axes as ONE 2-D device mesh
+(``("data", "model")``, ``mesh``): prompts×groups batches shard over
+"data"; params and AdamW moments shard over "model" per the
+:class:`PartitionPlan` (``sharding``) — FSDP-style for dense backbone
+leaves, expert-parallel for MoE tables, head-parallel for attention/MLA
+projections, all declared by the logical axes in ``repro.models.params``.
+Sharded jit entry points for the trainer's sample/rewards/update consume
+the plan; sequential gradient-accumulation microbatching lives in
+``microbatch``; ``shard`` holds the ``shard_map`` per-device rollout for
+communication-free generation and the serving engine's keyed executor.
 
-Everything degrades to the exact single-device path when
-``DistConfig.data_parallel`` resolves to one device: ``data_mesh`` returns
-``None`` and the jit wrappers reduce to plain ``jax.jit``.  Testable on CPU
-via ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+Everything degrades by construction: ``dp×mp=1`` resolves to no mesh and
+plain ``jax.jit`` (the exact single-device path); ``mp=1`` builds the
+historical 1-D "data" mesh with fully replicated params (bit-identical to
+the pre-"model"-axis subsystem); and layouts are a runtime choice —
+checkpoints move freely between ``dp=4`` and ``dp=2×mp=2`` through the
+canonical unsharded on-disk layout.  Testable on CPU via
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
 """
-from repro.distributed.mesh import (DATA_AXIS, data_mesh,
-                                    resolve_data_parallel)
+from repro.distributed.mesh import (DATA_AXIS, MODEL_AXIS, data_mesh,
+                                    mesh_dp, mesh_mp, resolve_axes,
+                                    resolve_data_parallel,
+                                    resolve_model_parallel, train_mesh)
 from repro.distributed.microbatch import (accumulated_value_and_grad,
                                           chunk_batch)
 from repro.distributed.shard import (make_rollout_keyed_sharded,
                                      make_rollout_sharded, rollout_sharded)
-from repro.distributed.sharding import (batch_sharding, check_batch_divisible,
+from repro.distributed.sharding import (PartitionPlan, batch_sharding,
+                                        check_batch_divisible,
                                         jit_fused_step, jit_rewards,
-                                        jit_sample, jit_update, replicated,
+                                        jit_sample, jit_update,
+                                        partition_plan, replicated,
                                         traj_shardings)
 
 __all__ = [
-    "DATA_AXIS", "data_mesh", "resolve_data_parallel",
+    "DATA_AXIS", "MODEL_AXIS", "data_mesh", "train_mesh", "mesh_dp",
+    "mesh_mp", "resolve_axes", "resolve_data_parallel",
+    "resolve_model_parallel",
     "accumulated_value_and_grad", "chunk_batch",
     "make_rollout_keyed_sharded", "make_rollout_sharded", "rollout_sharded",
-    "batch_sharding", "check_batch_divisible", "jit_fused_step",
-    "jit_rewards", "jit_sample", "jit_update", "replicated",
-    "traj_shardings",
+    "PartitionPlan", "partition_plan", "batch_sharding",
+    "check_batch_divisible", "jit_fused_step", "jit_rewards", "jit_sample",
+    "jit_update", "replicated", "traj_shardings",
 ]

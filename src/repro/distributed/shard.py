@@ -8,6 +8,12 @@ instead hands each data shard its own fold of the PRNG key and runs the
 rollout fully locally — zero cross-device communication, embarrassingly
 parallel.  Consequently the samples differ from (are statistically
 exchangeable with, not equal to) a single-device rollout of the same key.
+
+On a 2-D ``(data, model)`` mesh the shard_map paths mention only the
+"data" axis: params arrive replicated (gathered) and every model column
+computes the same shard — correct, but it forgoes the PartitionPlan's
+memory win.  The serving executor (``make_rollout_keyed_sharded``)
+therefore switches to a plan-consuming SPMD jit when ``mp > 1``.
 """
 from __future__ import annotations
 
@@ -18,7 +24,9 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.rollout import Trajectory, rollout, rollout_keyed
-from repro.distributed.mesh import DATA_AXIS
+from repro.distributed.mesh import DATA_AXIS, mesh_dp, mesh_mp
+from repro.distributed.sharding import (batch_sharding, replicated,
+                                        traj_shardings)
 
 
 def make_rollout_sharded(adapter, scheduler, num_steps: int, mesh: Mesh,
@@ -39,7 +47,7 @@ def make_rollout_sharded(adapter, scheduler, num_steps: int, mesh: Mesh,
     # computation per shard) but shard_map cannot prove it
     sharded = shard_map(local, mesh=mesh, in_specs=(P(), P(DATA_AXIS), P()),
                         out_specs=out_specs, check_rep=False)
-    dp = mesh.shape[DATA_AXIS]
+    dp = mesh_dp(mesh)
 
     def run(params, cond: jax.Array, key: jax.Array) -> Trajectory:
         if cond.shape[0] % dp != 0:
@@ -53,13 +61,21 @@ def make_rollout_sharded(adapter, scheduler, num_steps: int, mesh: Mesh,
 
 
 def make_rollout_keyed_sharded(adapter, scheduler, num_steps: int,
-                               mesh: Optional[Mesh], x0_only: bool = False):
+                               mesh: Optional[Mesh], x0_only: bool = False,
+                               plan=None):
     """Sharded entry point for the *per-request-keyed* rollout (the serving
     engine's executor): cond AND the (B, 2) per-request key batch are both
-    sharded over the data axis, so each device runs exactly the computation
-    the single-device path runs for its slice of requests — no axis-index
-    key folding, hence **bit-identical per request** to ``mesh=None``
-    (tests/test_serving.py asserts exact equality on 4 faked host devices).
+    sharded over the data axis.
+
+    On a data-only mesh (``mp=1``) this is a ``shard_map``: each device
+    runs exactly the computation the single-device path runs for its slice
+    of requests — no axis-index key folding, hence **bit-identical per
+    request** to ``mesh=None`` (tests/test_serving.py asserts exact
+    equality on 4 faked host devices).  With ``mp > 1`` the executor is
+    instead an SPMD jit consuming the PartitionPlan — params stay
+    model-sharded (the memory point of the plan) and XLA inserts the
+    gather collectives, so results are f32-rounding-equal (reduction
+    order), not bit-identical, to the ``mp=1`` layouts.
 
     Returns ``fn(params, cond, keys, sde_mask) -> Trajectory`` (jitted;
     build once per (batch, num_steps) shape and reuse — the engine's
@@ -78,15 +94,25 @@ def make_rollout_keyed_sharded(adapter, scheduler, num_steps: int,
 
     if mesh is None:
         return jax.jit(local)
-    out_specs = (P(DATA_AXIS) if x0_only else
-                 Trajectory(xs=P(None, DATA_AXIS), logps=P(None, DATA_AXIS),
-                            ts=P(), sde_mask=P(), cond=P(DATA_AXIS)))
-    # check_rep=False: ts/sde_mask are replicated by construction (identical
-    # computation per shard) but shard_map cannot prove it
-    sharded = shard_map(local, mesh=mesh,
-                        in_specs=(P(), P(DATA_AXIS), P(DATA_AXIS), P()),
-                        out_specs=out_specs, check_rep=False)
-    dp = mesh.shape[DATA_AXIS]
+    dp = mesh_dp(mesh)
+    if mesh_mp(mesh) > 1:
+        rep = replicated(mesh)
+        psh = plan.param_shardings() if plan is not None else rep
+        b0 = batch_sharding(mesh, 0)
+        out_sh = b0 if x0_only else traj_shardings(mesh)
+        _jitted = jax.jit(local, in_shardings=(psh, b0, b0, rep),
+                          out_shardings=out_sh)
+    else:
+        out_specs = (P(DATA_AXIS) if x0_only else
+                     Trajectory(xs=P(None, DATA_AXIS),
+                                logps=P(None, DATA_AXIS),
+                                ts=P(), sde_mask=P(), cond=P(DATA_AXIS)))
+        # check_rep=False: ts/sde_mask are replicated by construction
+        # (identical computation per shard) but shard_map cannot prove it
+        sharded = shard_map(local, mesh=mesh,
+                            in_specs=(P(), P(DATA_AXIS), P(DATA_AXIS), P()),
+                            out_specs=out_specs, check_rep=False)
+        _jitted = jax.jit(sharded)
 
     def run(params, cond, keys, sde_mask):
         if cond.shape[0] % dp != 0:
@@ -96,7 +122,6 @@ def make_rollout_keyed_sharded(adapter, scheduler, num_steps: int,
                 "dp-aligned")
         return _jitted(params, cond, keys, sde_mask)
 
-    _jitted = jax.jit(sharded)
     return run
 
 

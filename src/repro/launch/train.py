@@ -13,13 +13,19 @@ the registry, so they can never drift from what is registered.
   PYTHONPATH=src python -m repro.launch.train --config run.json \\
       --set flow.eta=0.5 --set optim.lr=3e-4 --set loop.log_file=log.json
 
-Data-parallel training shards prompts×groups over devices, with optional
-gradient-accumulation microbatching (``repro.distributed``); on CPU, host
-devices are faked via XLA_FLAGS:
+Distributed training runs on a 2-D (data × model) device mesh: prompt×group
+batches shard over the "data" axis, params/optimizer moments over the
+"model" axis per the PartitionPlan, with optional gradient-accumulation
+microbatching (``repro.distributed``); on CPU, host devices are faked via
+XLA_FLAGS:
 
   PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
       python -m repro.launch.train --reduced --steps 2 \\
       --set dist.data_parallel=4 --set dist.microbatch=2
+
+  PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+      python -m repro.launch.train --reduced --steps 2 \\
+      --set dist.data_parallel=2 --set dist.model_parallel=2
 
 The equivalent programmatic path is ``Experiment.from_file("run.json")``
 (see ROADMAP.md "Running experiments").
@@ -29,18 +35,18 @@ from __future__ import annotations
 import jax
 
 from repro.api import Experiment
-from repro.distributed import resolve_data_parallel
+from repro.distributed import resolve_axes
 
 
 def main(argv=None) -> None:
     exp = Experiment.from_cli(argv)
     d = exp.describe()
-    dp = resolve_data_parallel(exp.cfg.dist)
+    dp, mp = resolve_axes(exp.cfg.dist)
     print(f"[train] {d['trainer']['name']} on {d['arch']['name']} "
           f"({d['arch']['n_params']/1e6:.1f}M params), "
           f"sde={d['scheduler']['name']}, rewards={d['rewards']}")
     print(f"[train] devices={jax.local_device_count()} data_parallel={dp} "
-          f"microbatch={exp.cfg.dist.microbatch or 1}")
+          f"model_parallel={mp} microbatch={exp.cfg.dist.microbatch or 1}")
     p = exp.cfg.perf
     if p != type(p)():
         print(f"[perf] remat={p.remat} fuse_step={p.fuse_step}"
@@ -54,9 +60,11 @@ def main(argv=None) -> None:
         for name, mem in tr.memory_stats(cond).items():
             # analysis_dict degrades to {"error": str} on backends without
             # memory_analysis support — report, don't crash the launch
-            pretty = " ".join(f"{k.replace('_bytes', '')}={v / 1e6:.2f}MB"
-                              if isinstance(v, (int, float)) else f"{k}={v}"
-                              for k, v in mem.items() if v is not None)
+            pretty = " ".join(
+                f"{k[:-len('_bytes')]}={v / 1e6:.2f}MB"
+                if k.endswith("_bytes") and isinstance(v, (int, float))
+                else f"{k}={v}"
+                for k, v in mem.items() if v is not None)
             print(f"[perf] {name} memory_analysis: {pretty}")
     result = exp.train()
     hist = result["history"]

@@ -2,6 +2,13 @@
 
 Supports grouped-query attention, optional per-head q/k RMSNorm (Qwen3),
 sliding windows (enables long_500k for dense archs) and KV caches.
+
+Sharding: ``wq``/``wo`` carry the ``"heads"`` logical axis and ``wk``/``wv``
+carry ``"kv_heads"``, so under ``dist.model_parallel>1`` the
+:class:`~repro.distributed.PartitionPlan` shards the projections
+head-parallel when the head count divides the model axis (``MODEL_SHARDABLE``
+priority; GQA kv heads may stay replicated when K < mp).  Declared here via
+:class:`repro.models.params.P` — the distributed layer never names modules.
 """
 from __future__ import annotations
 

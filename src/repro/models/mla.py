@@ -5,6 +5,14 @@ small shared RoPE key.  Train/prefill expands the latent into per-head K/V;
 decode uses the *absorbed* formulation (W_uk folded into the query, W_uv into
 the output), so the KV cache is only ``(T, kv_lora_rank + rope_dim)`` per
 sequence — the memory win that defines MLA.
+
+Sharding: the up-projections ``w_uq``/``w_uk``/``w_uv`` and the output
+projection ``wo`` carry the ``"heads"`` logical axis in their specs, so
+under ``dist.model_parallel>1`` the :class:`~repro.distributed.PartitionPlan`
+shards them head-parallel (``MODEL_SHARDABLE`` priority); the small
+latent down-projections and norms stay replicated or fall back to embed
+(FSDP) sharding.  Declared here via :class:`repro.models.params.P` — the
+distributed layer never names modules.
 """
 from __future__ import annotations
 

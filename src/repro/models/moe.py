@@ -21,6 +21,13 @@ Sharding modes:
     every token and mix by dense gates; E/top_k FLOP overcompute buys
     dispatch-free communication (grok-1: 13.6× less traffic, EXPERIMENTS.md
     §Perf iteration 2).
+
+Under ``dist.model_parallel>1`` the training-side
+:class:`~repro.distributed.PartitionPlan` reads these same logical axes:
+``"experts"``/``"experts_mdl"`` rank first in ``MODEL_SHARDABLE``, so the
+stacked expert tables shard expert-parallel whenever E divides the model
+axis, falling back to the wide ``f`` dim and then embed (FSDP) sharding —
+declared here via :class:`repro.models.params.P`, never by module name.
 """
 from __future__ import annotations
 

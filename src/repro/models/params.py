@@ -71,6 +71,41 @@ def n_params(spec) -> int:
                jax.tree.leaves(spec, is_leaf=_is_p))
 
 
+# Logical axes eligible for "model"-mesh-axis sharding, in priority order:
+# for each param leaf the FIRST axis listed here whose dim divides the
+# model-parallel size is the one sharded (repro.distributed.PartitionPlan).
+# Experts come before heads before wide hidden dims before the embed
+# fallback, so MoE expert tables shard expert-parallel, attention/MLA
+# projections shard head-parallel, and dense backbone leaves (time/cond
+# embeds, norms aside) fall back to FSDP-style embed sharding.  Axes not
+# listed — norm scales, head_dim, conv taps, the MLA LoRA bottlenecks, the
+# scan "layers" dim — are never sharded: either tiny, or splitting them
+# would cut a contraction XLA cannot partition profitably at this scale.
+MODEL_SHARDABLE: Tuple[str, ...] = (
+    "experts", "experts_mdl",
+    "heads", "kv_heads", "ssm_heads",
+    "inner", "mlp", "moe_f",
+    "vocab",
+    "embed", "embed_r", "moe_in", "moe_out",
+    "cond", "time", "latent",
+)
+
+
+def model_shard_dim(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+                    mp: int) -> Optional[int]:
+    """The dim index of a param leaf to shard over the "model" mesh axis
+    (size ``mp``), or None to replicate — the per-leaf decision the
+    PartitionPlan is built from.  Purely a function of the declared logical
+    axes, so the plan can never drift from the parameter structure."""
+    if mp <= 1:
+        return None
+    for name in MODEL_SHARDABLE:
+        for i, ax in enumerate(axes):
+            if ax == name and shape[i] >= mp and shape[i] % mp == 0:
+                return i
+    return None
+
+
 def stack(spec, n: int, axis_name: Optional[str] = "layers"):
     """Add a leading stacking dim (for lax.scan over layers)."""
     return jax.tree.map(

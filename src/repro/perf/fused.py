@@ -50,4 +50,6 @@ def make_fused_step(trainer):
         return new_state, metrics
 
     donate = trainer.dist.donate_state and trainer.donate_state_ok
-    return distributed.jit_fused_step(fused, trainer.mesh, donate=donate)
+    return distributed.jit_fused_step(
+        fused, trainer.mesh, getattr(trainer, "state_sharding", None),
+        donate=donate, extras_sharding=trainer.update_extras_sharding())

@@ -46,6 +46,26 @@ def _struct(tree: Any) -> Any:
         tree)
 
 
+def state_bytes(trainer) -> Dict[str, int]:
+    """Param + optimizer byte footprint: the canonical (unsharded) total
+    and what one device actually holds under the trainer's active
+    :class:`repro.distributed.PartitionPlan` — equal when nothing is
+    sharded (no mesh, or ``model_parallel=1``), strictly smaller per
+    device under an FSDP/expert/head-sharded plan.  Host-side arithmetic
+    over shapes; nothing compiles or runs."""
+    plan = getattr(trainer, "plan", None)
+    if plan is not None:
+        return plan.bytes_report(trainer.state)
+    total = 0
+    for leaf in jax.tree.leaves(trainer.state):
+        size = 1
+        for d in jnp.shape(leaf):
+            size *= int(d)
+        total += size * jnp.dtype(jnp.result_type(leaf)).itemsize
+    return {"total_bytes": int(total), "per_device_bytes": int(total),
+            "sharded_leaves": 0}
+
+
 def update_memory(trainer, cond: jax.Array) -> Dict[str, Dict]:
     """AOT-compile the trainer's jitted update — and, when
     ``perf.fuse_step`` is on, the fused step — for a ``cond`` prompt batch
@@ -70,7 +90,8 @@ def update_memory(trainer, cond: jax.Array) -> Dict[str, Dict]:
     state = _struct(trainer.state)
     extras = _struct(trainer.update_extras())
     out = {"update": analysis_dict(
-        trainer._update_jit.lower(state, traj, adv, key, extras).compile())}
+        trainer._update_jit.lower(state, traj, adv, key, extras).compile()),
+        "state": state_bytes(trainer)}
     if trainer._fused_jit is not None:
         cond_g = jax.ShapeDtypeStruct((B, Lc, D), F32)
         it = jax.ShapeDtypeStruct((), jnp.int32)

@@ -35,12 +35,15 @@ Architecture (the production path the ROADMAP north star asks for):
 * **Cond-encoding cache**: repeat prompts skip the ConditionProvider (an
   LRU keyed by prompt string) — the serving-side analogue of the paper's
   §2.2 preprocessing cache.
-* **Sharded inference** reuses ``repro.distributed``'s "data" mesh: with a
+* **Sharded inference** reuses ``repro.distributed``'s 2-D mesh: with a
   mesh, execution goes through ``make_rollout_keyed_sharded`` (cond and
   per-request keys both batch-sharded, no axis-index key folds), so
   ``dist.data_parallel=N`` serves N-way today on faked CPU devices and on
   real accelerators unchanged — with output bit-identical per request to
-  single-device.
+  single-device.  With ``dist.model_parallel>1`` the executor consumes the
+  trainer's :class:`repro.distributed.PartitionPlan` (params stay
+  model-sharded end to end; outputs are f32-rounding-equal rather than
+  bit-identical — see ``make_rollout_keyed_sharded``).
 
 ``engine.stats`` is a JSON-serializable health snapshot (queue depths,
 rejections, SLO misses, dispatch/compile accounting) consumed by
@@ -209,7 +212,7 @@ class ServingEngine:
                  deadline_s: float = 0.005,
                  admission: Optional[AdmissionConfig] = None,
                  max_inflight: int = 4,
-                 mesh=None, provider=None, cond_len: int = 16,
+                 mesh=None, plan=None, provider=None, cond_len: int = 16,
                  cond_cache_entries: int = 1024,
                  clock: Callable[[], float] = time.monotonic):
         if max_inflight < 1:
@@ -223,10 +226,16 @@ class ServingEngine:
         self.deadline_s = deadline_s
         self.max_inflight = max_inflight
         self.mesh = mesh
+        # the PartitionPlan is only consulted when the mesh has a model
+        # axis (the mp=1 shard_map path takes replicated params); self-build
+        # one from the adapter's spec if the caller did not hand one over
+        if plan is None and distributed.mesh_mp(mesh) > 1:
+            plan = distributed.partition_plan(mesh, adapter.spec())
+        self.plan = plan
         self.provider = provider
         self.cond_len = cond_len
         self.clock = clock
-        dp = 1 if mesh is None else mesh.shape[distributed.DATA_AXIS]
+        dp = distributed.mesh_dp(mesh)
         self.grid = BucketGrid(buckets, max_batch=max_batch, dp=dp)
         self.admission = AdmissionController(admission)
         self.cond_cache = CondCache(cond_cache_entries)
@@ -261,6 +270,7 @@ class ServingEngine:
         the object to pass to ``trainer.attach_engine``.  ``max_batch``
         caps the rollout chunk size (memory bound); batches larger than it
         run in capacity-sized slices."""
+        kw.setdefault("plan", getattr(trainer, "plan", None))
         return cls(trainer.adapter, trainer.scheduler,
                    num_steps=trainer.flow.num_steps, mesh=trainer.mesh, **kw)
 
@@ -443,7 +453,7 @@ class ServingEngine:
         if fn is None:
             fn = distributed.make_rollout_keyed_sharded(
                 self.adapter, self.scheduler, num_steps, self.mesh,
-                x0_only=x0_only)
+                x0_only=x0_only, plan=self.plan)
             self._fns[(num_steps, x0_only)] = fn
         return fn
 
@@ -640,6 +650,6 @@ class ServingEngine:
                            "entries": len(self.cond_cache)},
             "buckets": list(self.grid.sizes),
             "step_tiers": list(self.steps.sizes),
-            "data_parallel": (1 if self.mesh is None
-                              else self.mesh.shape[distributed.DATA_AXIS]),
+            "data_parallel": distributed.mesh_dp(self.mesh),
+            "model_parallel": distributed.mesh_mp(self.mesh),
         }

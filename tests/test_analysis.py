@@ -453,6 +453,82 @@ def build(mesh):
     assert not graph.is_traced(by_name["build"])
 
 
+def test_wrapper_layer_transitive_through_helper(tmp_path):
+    """The 2-D distributed.jit_* layering: jit_sample forwards fn into a
+    shared _plan_jit helper which calls jax.jit.  The forwarding function
+    must itself become a wrapper (its call sites trace the argument), and
+    the non-donating helper chain must NOT acquire donation marks."""
+    f = tmp_path / "mod.py"
+    f.write_text("""\
+import jax
+
+def _plan_jit(fn, in_shardings, out_shardings=None):
+    kw = {}
+    if out_shardings is not None:
+        kw["out_shardings"] = out_shardings
+    return jax.jit(fn, in_shardings=in_shardings, **kw)
+
+def jit_sample(fn, mesh, params_sharding=None):
+    return _plan_jit(fn, (params_sharding, None), None)
+
+def _sample(params, cond, key):
+    return params
+
+def host_side(rows):
+    return len(rows)
+
+def build(mesh):
+    return jit_sample(_sample, mesh)
+""")
+    mod = Module.parse(f)
+    graph = ScopeGraph([mod])
+    by_name = {fi.name: fi for fi in graph.module_functions(mod)}
+    # transitive: _sample reaches jax.jit through jit_sample -> _plan_jit
+    assert graph.is_traced(by_name["_sample"])
+    assert not graph.is_traced(by_name["host_side"])
+    # position 0 of both layers is a wrapper position...
+    assert 0 in graph.wrapper_positions[id(by_name["jit_sample"].node)]
+    assert 0 in graph.wrapper_positions[id(by_name["_plan_jit"].node)]
+    # ...and neither layer donates (no donate_argnums anywhere)
+    assert id(by_name["jit_sample"].node) not in graph.wrapper_donates
+    assert id(by_name["_plan_jit"].node) not in graph.wrapper_donates
+
+
+def test_wrapper_donation_inherited_through_forwarding(tmp_path):
+    """Donation marks propagate up a forwarding chain: a helper whose
+    jax.jit passes donate_argnums hands its donated positions to every
+    wrapper that forwards a function into it — R005's donated-buffer
+    tracking keys off the outermost call site."""
+    f = tmp_path / "mod.py"
+    f.write_text("""\
+import jax
+
+def _donating_jit(fn, shardings):
+    return jax.jit(fn, in_shardings=shardings, donate_argnums=(0,))
+
+def jit_update(fn, mesh, state_sharding=None):
+    return _donating_jit(fn, (state_sharding, None))
+
+def _update(state, batch):
+    return state
+
+def not_forwarding(fn, mesh):
+    # fn never reaches a traced position: stays a plain function
+    return (fn, mesh)
+""")
+    mod = Module.parse(f)
+    graph = ScopeGraph([mod])
+    by_name = {fi.name: fi for fi in graph.module_functions(mod)}
+    assert graph.wrapper_donates[id(by_name["_donating_jit"].node)] == {0}
+    # inherited by the forwarding layer
+    assert graph.wrapper_donates[id(by_name["jit_update"].node)] == {0}
+    assert 0 in graph.wrapper_positions[id(by_name["jit_update"].node)]
+    # a function that merely receives fn without forwarding it into a
+    # traced position is neither wrapper nor donor
+    assert id(by_name["not_forwarding"].node) not in graph.wrapper_positions
+    assert id(by_name["not_forwarding"].node) not in graph.wrapper_donates
+
+
 # ---------------------------------------------------------------- baseline
 
 def test_baseline_roundtrip_and_staleness(tmp_path):

@@ -1,7 +1,10 @@
 """repro.distributed tests: gradient-accumulation microbatching equivalence,
-batch/device validation, and multi-device (4 faked CPU host devices, spawned
+batch/device validation, 2-D (data × model) mesh axis resolution and
+PartitionPlan layouts, and multi-device (4 faked CPU host devices, spawned
 in subprocesses so the single-device tier-1 environment stays untouched)
-numerical equivalence of sharded vs single-device training."""
+numerical equivalence of sharded vs single-device training — including
+dp=2×mp=2 vs single-device for all four trainer families and checkpoint
+portability across mesh layouts."""
 import os
 import subprocess
 import sys
@@ -253,3 +256,220 @@ def test_shard_map_rollout_entry_point():
     trajectories with independent per-shard noise."""
     out = _run_with_host_devices(_SHARD_MAP_SCRIPT)
     assert "SHARDMAP-OK" in out
+
+# ------------------------------------------------------- 2-D axis resolution
+
+def test_resolve_axes_defaults_and_auto():
+    n = jax.local_device_count()
+    assert distributed.resolve_axes(DistConfig()) == (1, 1)
+    # data_parallel=0 claims every device not claimed by model_parallel
+    assert distributed.resolve_axes(DistConfig(data_parallel=0)) == (n, 1)
+    # both auto resolves to all-data (the historical data_parallel=0)
+    assert distributed.resolve_axes(
+        DistConfig(data_parallel=0, model_parallel=0)) == (n, 1)
+    # model_parallel=0 claims the devices data_parallel left over
+    assert distributed.resolve_axes(
+        DistConfig(data_parallel=1, model_parallel=0)) == (1, n)
+
+
+def test_resolve_axes_validation():
+    n = jax.local_device_count()
+    with pytest.raises(ValueError, match="XLA_FLAGS"):
+        distributed.resolve_axes(DistConfig(data_parallel=2 * n,
+                                            model_parallel=n))
+    with pytest.raises(ValueError, match="model_parallel"):
+        distributed.resolve_axes(DistConfig(model_parallel=n + 1))
+    with pytest.raises(ValueError, match=">= 0"):
+        distributed.resolve_axes(DistConfig(data_parallel=-1))
+    with pytest.raises(ValueError, match=">= 0"):
+        distributed.resolve_axes(DistConfig(model_parallel=-2))
+
+
+def test_train_mesh_degradation_tiers():
+    """dp×mp=1 -> no mesh; mp=1 -> the historical 1-D ("data",) mesh."""
+    assert distributed.train_mesh(
+        DistConfig(data_parallel=1, model_parallel=1)) is None
+    n = jax.local_device_count()
+    if n > 1:
+        mesh = distributed.train_mesh(DistConfig(data_parallel=n))
+        assert mesh.axis_names == (distributed.DATA_AXIS,)
+        assert distributed.mesh_dp(mesh) == n
+        assert distributed.mesh_mp(mesh) == 1
+    assert distributed.mesh_dp(None) == 1 and distributed.mesh_mp(None) == 1
+
+
+def test_model_shard_dim_choices():
+    from repro.models.params import model_shard_dim
+    # mp=1 never shards
+    assert model_shard_dim((8, 64), ("embed", "mlp"), 1) is None
+    # priority: experts beats heads beats wide dims beats embed
+    assert model_shard_dim((4, 16, 64), ("experts", "embed", "moe_f"), 2) == 0
+    assert model_shard_dim((8, 16, 64), ("heads", "head_dim", "embed"), 2) == 0
+    assert model_shard_dim((64, 256), ("embed", "mlp"), 2) == 1
+    # norm / head_dim / conv scales stay replicated
+    assert model_shard_dim((64,), ("norm",), 2) is None
+    assert model_shard_dim((16,), ("head_dim",), 2) is None
+    # indivisible or too-small dims are skipped, falling through by priority
+    assert model_shard_dim((3, 64), ("experts", "embed"), 2) == 1
+    assert model_shard_dim((1, 1), ("experts", "embed"), 2) is None
+
+
+def test_partition_plan_layouts_and_bytes():
+    """PartitionPlan on an explicitly built 2-D mesh: params shard along
+    "model", AdamW moments inherit their param's sharding leaf-for-leaf,
+    scalars stay replicated, and the per-device byte report shrinks."""
+    if jax.local_device_count() < 4:
+        pytest.skip("needs 4 (faked) devices — runs in make test-dist")
+    from jax.sharding import Mesh, PartitionSpec
+    mesh = Mesh(np.asarray(jax.local_devices()[:4]).reshape(2, 2),
+                (distributed.DATA_AXIS, distributed.MODEL_AXIS))
+    tr = _build()                                  # single-device trainer
+    plan = distributed.partition_plan(mesh, tr.adapter.spec())
+    psh = plan.param_shardings()
+    specs = [s.spec for s in jax.tree.leaves(
+        psh, is_leaf=lambda x: hasattr(x, "spec"))]
+    assert any(distributed.MODEL_AXIS in [e for ent in s if ent is not None
+               for e in (ent if isinstance(ent, tuple) else (ent,))]
+               for s in specs), "no leaf sharded over the model axis"
+    ssh = plan.state_shardings(tr.state)
+    # mu/nu mirror params: same sharding tree; step counter replicated
+    assert jax.tree.structure(ssh.opt.mu, is_leaf=lambda x: hasattr(
+        x, "spec")) == jax.tree.structure(psh, is_leaf=lambda x: hasattr(
+            x, "spec"))
+    for a, b in zip(jax.tree.leaves(ssh.params,
+                                    is_leaf=lambda x: hasattr(x, "spec")),
+                    jax.tree.leaves(ssh.opt.mu,
+                                    is_leaf=lambda x: hasattr(x, "spec"))):
+        assert a.spec == b.spec
+    assert ssh.opt.step.spec == PartitionSpec()
+    rep = plan.bytes_report(tr.state)
+    assert rep["sharded_leaves"] > 0
+    assert rep["per_device_bytes"] < rep["total_bytes"]
+    # the report is consistent with actually placing the state
+    placed = jax.device_put(tr.state, ssh)
+    leaf = jax.tree.leaves(placed.params)[0]
+    assert len(leaf.sharding.device_set) == 4
+
+
+_TWO_AXIS_SCRIPT = r"""
+import jax, jax.numpy as jnp
+import numpy as np
+from repro import configs, registry, distributed
+from repro.config import DistConfig, FlowRLConfig, OptimConfig, RewardSpec
+
+assert jax.local_device_count() == 4, jax.devices()
+FLOW = FlowRLConfig(num_steps=3, group_size=4, latent_tokens=8, latent_dim=8,
+                    clip_range=0.2,
+                    rewards=(RewardSpec("text_render", 1.0,
+                             args={"latent_dim": 8, "latent_tokens": 8}),))
+OPT = OptimConfig(lr=1e-3, total_steps=20, warmup_steps=2)
+ARCH = configs.get_reduced("flux_dit")
+TNAME = "__TNAME__"
+
+def train(dist):
+    key = jax.random.PRNGKey(0)
+    tr = registry.build("trainer", TNAME, ARCH, FLOW, OPT, key=key,
+                        dtype=jnp.float32, dist=dist)
+    cond = jax.random.normal(jax.random.PRNGKey(1), (4, 4, 512), jnp.float32)
+    hist = [{k: float(v) for k, v in tr.step(cond, key, it=it).items()}
+            for it in range(3)]
+    return tr, hist
+
+# 2-D FIRST: building the mesh enables partitionable threefry (sharding-
+# invariant RNG), so the single-device reference draws the same stream
+t22, h22 = train(DistConfig(data_parallel=2, model_parallel=2))
+t1, h1 = train(DistConfig())
+
+assert t22.mesh.axis_names == ("data", "model"), t22.mesh
+assert t22.plan is not None and t22.plan.model_parallel == 2
+rep = t22.plan.bytes_report(t22.state)
+assert rep["sharded_leaves"] > 0, rep
+assert rep["per_device_bytes"] < rep["total_bytes"], rep
+# at least one live param leaf is genuinely model-sharded across 4 devices
+shards = [leaf.sharding for leaf in jax.tree.leaves(t22.state.params)]
+assert any(len(s.device_set) == 4 and not s.is_fully_replicated
+           for s in shards), shards
+
+for a, b in zip(h1, h22):
+    for k in ("reward_mean", "loss", "grad_norm"):
+        assert abs(a[k] - b[k]) <= 2e-4 + 1e-3 * abs(a[k]), (k, a[k], b[k])
+# documented f32 band: model-axis collectives reorder reductions, and AdamW
+# turns that noise into ~lr-scale sign flips where vhat ~ 0.  Every element
+# is capped at a few x lr (a flipped element moves <= 2*lr per step), and
+# at most a 0.01% tail may sit outside the tight band the rest must meet.
+n_tot = n_out = 0
+for x, y in zip(jax.tree.leaves(t1.state.params),
+                jax.tree.leaves(t22.state.params)):
+    x, y = np.asarray(x), np.asarray(y)
+    np.testing.assert_allclose(y, x, rtol=0, atol=5e-3)
+    n_out += int((np.abs(y - x) > (2e-4 + 1e-3 * np.abs(x))).sum())
+    n_tot += x.size
+assert n_out <= max(1, n_tot // 10_000), (n_out, n_tot)
+print("TWO-AXIS-OK")
+"""
+
+
+@pytest.mark.parametrize("tname", ["flow_grpo", "grpo_guard", "nft", "awm"])
+def test_two_axis_training_matches_single_device(tname):
+    """dp=2×mp=2 on 4 faked devices trains equivalently to single-device
+    (documented f32 tolerance) for every trainer family, with params
+    genuinely sharded over the model axis."""
+    out = _run_with_host_devices(
+        _TWO_AXIS_SCRIPT.replace("__TNAME__", tname))
+    assert "TWO-AXIS-OK" in out
+
+
+_PORTABLE_SCRIPT = r"""
+import os, tempfile
+import jax, jax.numpy as jnp
+import numpy as np
+from repro import checkpoint, configs, registry
+from repro.config import DistConfig, FlowRLConfig, OptimConfig, RewardSpec
+
+assert jax.local_device_count() == 4, jax.devices()
+FLOW = FlowRLConfig(num_steps=3, group_size=4, latent_tokens=8, latent_dim=8,
+                    clip_range=0.2,
+                    rewards=(RewardSpec("text_render", 1.0,
+                             args={"latent_dim": 8, "latent_tokens": 8}),))
+OPT = OptimConfig(lr=1e-3, total_steps=20, warmup_steps=2)
+ARCH = configs.get_reduced("flux_dit")
+key = jax.random.PRNGKey(0)
+cond = jax.random.normal(jax.random.PRNGKey(1), (4, 4, 512), jnp.float32)
+
+# train under dp=4, checkpoint (device_get gathers -> canonical layout)
+t4 = registry.build("trainer", "flow_grpo", ARCH, FLOW, OPT, key=key,
+                    dtype=jnp.float32, dist=DistConfig(data_parallel=4))
+for it in range(2):
+    t4.step(cond, key, it=it)
+ckpt_dir = tempfile.mkdtemp()
+checkpoint.save_checkpoint(ckpt_dir, 2, t4.state)
+saved = jax.device_get(t4.state)
+
+# resume under dp=2×mp=2: restore canonical, re-place per the new plan
+t22 = registry.build("trainer", "flow_grpo", ARCH, FLOW, OPT, key=key,
+                     dtype=jnp.float32,
+                     dist=DistConfig(data_parallel=2, model_parallel=2))
+step, state = checkpoint.restore_latest(ckpt_dir, t22.state)
+assert step == 2
+t22.state = t22.place_state(state)
+
+# params (and moments) are bitwise what dp=4 wrote...
+for a, b in zip(jax.tree.leaves(saved), jax.tree.leaves(
+        jax.device_get(t22.state))):
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+# ...yet live on the 2-D layout, model-sharded
+shards = [leaf.sharding for leaf in jax.tree.leaves(t22.state.params)]
+assert any(len(s.device_set) == 4 and not s.is_fully_replicated
+           for s in shards), shards
+# and training continues from it
+m = t22.step(cond, key, it=2)
+assert np.isfinite(float(m["loss"]))
+print("PORTABLE-OK")
+"""
+
+
+def test_checkpoint_portable_across_mesh_layouts():
+    """A checkpoint written under dp=4 restores bitwise under dp=2×mp=2:
+    layouts are a runtime choice, the on-disk layout is canonical."""
+    out = _run_with_host_devices(_PORTABLE_SCRIPT)
+    assert "PORTABLE-OK" in out
