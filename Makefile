@@ -23,10 +23,11 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 DIST_FLAGS := --xla_force_host_platform_device_count=4
 
 .PHONY: verify deps-check lint test test-interpret test-dist test-serve \
-	test-perf-dist fuzz-serve smoke smoke-dist smoke-dist-2d bench-train
+	test-perf-dist test-pipeline fuzz-serve smoke smoke-dist smoke-dist-2d \
+	bench-train
 
 verify: deps-check lint test test-interpret test-dist test-serve \
-	test-perf-dist fuzz-serve
+	test-perf-dist test-pipeline fuzz-serve
 
 # Core modules must import on a bare jax+numpy interpreter: no dacite, and
 # zstandard/msgpack/hypothesis only ever loaded behind soft gates; the
@@ -35,7 +36,7 @@ deps-check:
 	$(PY) scripts/check_deps.py
 
 # jaxlint: stdlib-ast static analysis for this repo's JAX bug classes
-# (R001-R006; see `python -m repro.analysis --catalog`).  Fails on any
+# (R001-R007; see `python -m repro.analysis --catalog`).  Fails on any
 # finding that is neither inline-suppressed nor in .jaxlint-baseline.json.
 lint:
 	$(PY) -m repro.analysis src/repro benchmarks examples
@@ -91,6 +92,12 @@ fuzz-serve:
 test-perf-dist:
 	XLA_FLAGS="$(DIST_FLAGS)" $(PY) -m pytest -x -q tests/test_perf.py \
 	    -k "data_parallel or under_mesh"
+
+# Pipelined train loop: the pipeline=K-vs-sequential equivalence suite
+# re-run ON 4 faked host devices so the fused × data_parallel=4 × K
+# composition test (skipped in `make test`) executes too.
+test-pipeline:
+	XLA_FLAGS="$(DIST_FLAGS)" $(PY) -m pytest -x -q tests/test_pipeline.py
 
 # train-step perf trajectory: writes BENCH_train_step.json at the repo root
 bench-train:

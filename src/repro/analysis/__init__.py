@@ -23,8 +23,8 @@ Adding a rule (registry-style, like every other repro component)::
 
     # src/repro/analysis/rules.py
     @register_rule
-    class R007MyRule(Rule):
-        id = "R007"                      # unique, R\\d{3}
+    class R008MyRule(Rule):
+        id = "R008"                      # unique, R\\d{3}
         name = "my-rule"                 # kebab-case, shown in reports
         rationale = "one line: the bug class and why it matters"
 
@@ -34,7 +34,7 @@ Adding a rule (registry-style, like every other repro component)::
                     yield self.finding(module, fi.node, "explain the fix")
 
 That's the whole integration: the driver discovers rules through the
-registry, suppressions (``# jaxlint: disable=R007 — why``) and the
+registry, suppressions (``# jaxlint: disable=R008 — why``) and the
 baseline work immediately, and ``--catalog`` picks up the rationale.
 Add positive + negative fixtures in ``tests/test_analysis.py``.
 """

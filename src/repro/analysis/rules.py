@@ -9,6 +9,7 @@ R003 mutable-closure-capture            the PR-2 NFT frozen-reference class
 R004 python-control-flow-on-tracer      if/while on jnp-derived values
 R005 donated-buffer-reuse               read-after-donate is a dead buffer
 R006 recompile-hazard                   unhashable statics / jit-in-loop
+R007 blocking-drain-in-dispatch-loop    sync on the just-dispatched step
 """
 from __future__ import annotations
 
@@ -945,3 +946,178 @@ def _static_spec(call: ast.Call) -> Tuple[Set[int], Set[str]]:
             elif isinstance(v, ast.Constant) and isinstance(v.value, str):
                 names.add(v.value)
     return pos, names
+
+
+@register_rule
+class R007BlockingDrainInDispatchLoop(Rule):
+    id = "R007"
+    name = "blocking-drain-in-dispatch-loop"
+    rationale = ("device_get/block_until_ready/float() on the output of "
+                 "the jit step dispatched in the SAME loop iteration "
+                 "serializes host and device (the pre-pipeline TrainLoop "
+                 "shape) — buffer results and drain them a step late")
+
+    def check(self, module: Module, graph: ScopeGraph) -> Iterator[Finding]:
+        class_disp = self._class_dispatchers(module, graph)
+        for fi in graph.module_functions(module):
+            if graph.is_traced(fi) or isinstance(fi.node, ast.Lambda):
+                continue
+            yield from self._check_func(module, graph, fi, class_disp)
+
+    # ---------------------------------------------------------- dispatchers
+    def _dispatching_ctor(self, call: ast.Call, module: Module,
+                          graph: ScopeGraph, fi: Optional[FuncInfo]) -> bool:
+        """Does evaluating ``call`` build a jit-dispatching callable —
+        ``jax.jit(...)`` / ``pjit(...)`` directly, or any function of the
+        ``distributed.jit_*`` wrapper layer (ScopeGraph already knows which
+        functions trace a parameter)?"""
+        if last_name(call.func) in ("jit", "pjit"):
+            return True
+        return any(graph.wrapper_positions.get(id(t.node))
+                   for t in graph.resolve_call(call, module, fi))
+
+    def _class_dispatchers(self, module: Module, graph: ScopeGraph
+                           ) -> Dict[str, Set[str]]:
+        """class -> ``self.<attr>``s holding jitted callables."""
+        out: Dict[str, Set[str]] = {}
+        for fi in graph.module_functions(module):
+            if isinstance(fi.node, ast.Lambda) or fi.class_name is None:
+                continue
+            for n in shallow_walk(fi.node):
+                if not (isinstance(n, ast.Assign)
+                        and isinstance(n.value, ast.Call)
+                        and self._dispatching_ctor(n.value, module, graph,
+                                                   fi)):
+                    continue
+                for t in n.targets:
+                    if isinstance(t, ast.Attribute) and \
+                            isinstance(t.value, ast.Name) and \
+                            t.value.id == "self":
+                        out.setdefault(fi.class_name, set()).add(t.attr)
+        return out
+
+    def _local_dispatchers(self, module: Module, graph: ScopeGraph,
+                           fi: FuncInfo) -> Set[str]:
+        """Names in ``fi`` bound to jitted callables."""
+        out: Set[str] = set()
+        for n in shallow_walk(fi.node):
+            if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call) \
+                    and self._dispatching_ctor(n.value, module, graph, fi):
+                out.update(t.id for t in n.targets
+                           if isinstance(t, ast.Name))
+        return out
+
+    # ------------------------------------------------------------ the walk
+    def _check_func(self, module: Module, graph: ScopeGraph, fi: FuncInfo,
+                    class_disp: Dict[str, Set[str]]) -> Iterator[Finding]:
+        local_disp = self._local_dispatchers(module, graph, fi)
+        findings: List[Finding] = []
+        reported: Set[int] = set()
+
+        def is_dispatch(call: ast.Call) -> bool:
+            f = call.func
+            if isinstance(f, ast.Name) and f.id in local_disp:
+                return True
+            if isinstance(f, ast.Attribute) and \
+                    isinstance(f.value, ast.Name) and f.value.id == "self" \
+                    and fi.class_name:
+                if any(f.attr in class_disp.get(c, ())
+                       for c in graph.family(fi.class_name)):
+                    return True
+            if isinstance(f, ast.Call):        # jax.jit(g)(x)
+                return self._dispatching_ctor(f, module, graph, fi)
+            tgts = graph.resolve_call(call, module, fi)
+            return bool(tgts) and any(graph.is_traced(t) for t in tgts)
+
+        def dispatched_in(e: ast.expr, hot: Set[str]) -> bool:
+            return any(
+                (isinstance(n, ast.Name) and n.id in hot)
+                or (isinstance(n, ast.Call) and is_dispatch(n))
+                for n in ast.walk(e))
+
+        def sync_shapes(s: ast.stmt):
+            """(call, drained_expr, label) for blocking fetches under s."""
+            for n in shallow_walk(s):
+                if not isinstance(n, ast.Call):
+                    continue
+                chain = _attr_chain(n.func)
+                if chain and chain[-1] == "device_get" \
+                        and chain[0] == "jax" and n.args:
+                    yield n, n.args[0], "jax.device_get()"
+                elif chain and chain[-1] == "block_until_ready":
+                    if chain[0] == "jax" and n.args:
+                        yield n, n.args[0], "jax.block_until_ready()"
+                    elif not n.args and isinstance(n.func, ast.Attribute):
+                        yield n, n.func.value, ".block_until_ready()"
+                elif isinstance(n.func, ast.Name) \
+                        and n.func.id in _SYNC_BUILTINS and len(n.args) == 1:
+                    yield n, n.args[0], n.func.id + "()"
+                elif isinstance(n.func, ast.Attribute) \
+                        and n.func.attr in _SYNC_METHODS and not n.args:
+                    yield n, n.func.value, "." + n.func.attr + "()"
+
+        def targets_of(s: ast.stmt) -> List[str]:
+            if isinstance(s, ast.Assign):
+                names: List[str] = []
+                for t in s.targets:
+                    if isinstance(t, ast.Name):
+                        names.append(t.id)
+                    elif isinstance(t, (ast.Tuple, ast.List)):
+                        names.extend(e.id for e in t.elts
+                                     if isinstance(e, ast.Name))
+                return names
+            if isinstance(s, ast.AnnAssign) and \
+                    isinstance(s.target, ast.Name) and s.value is not None:
+                return [s.target.id]
+            return []
+
+        def handle(stmts: List[ast.stmt], hot: Set[str],
+                   in_loop: bool) -> None:
+            for s in stmts:
+                if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                    continue
+                if isinstance(s, (ast.For, ast.While, ast.AsyncFor)):
+                    inner = set(hot)
+                    handle(s.body, inner, True)
+                    handle(s.orelse, set(hot), in_loop)
+                    continue
+                if isinstance(s, ast.If):
+                    a, b = set(hot), set(hot)
+                    handle(s.body, a, in_loop)
+                    handle(s.orelse, b, in_loop)
+                    hot |= a | b
+                    continue
+                if isinstance(s, (ast.With, ast.AsyncWith)):
+                    handle(s.body, hot, in_loop)
+                    continue
+                if isinstance(s, ast.Try):
+                    handle(s.body, hot, in_loop)
+                    for h in s.handlers:
+                        handle(h.body, set(hot), in_loop)
+                    handle(s.orelse, hot, in_loop)
+                    handle(s.finalbody, hot, in_loop)
+                    continue
+                if in_loop:
+                    for call, arg, label in sync_shapes(s):
+                        if id(call) in reported:
+                            continue
+                        if dispatched_in(arg, hot):
+                            reported.add(id(call))
+                            findings.append(self.finding(
+                                module, call,
+                                f"{label} on the output of the jit step "
+                                "dispatched this iteration blocks until "
+                                "the device finishes — dispatch runs "
+                                "ahead only if results are buffered and "
+                                "drained >=1 step late (deque) or after "
+                                "the loop"))
+                    names = targets_of(s)
+                    hot.difference_update(names)
+                    value = getattr(s, "value", None)
+                    if names and isinstance(value, ast.Call) \
+                            and is_dispatch(value):
+                        hot.update(names)
+
+        handle(fi.node.body, set(), False)
+        yield from findings

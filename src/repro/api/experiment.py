@@ -368,7 +368,7 @@ class Experiment:
 
         train_loop = loop_lib.TrainLoop(
             trainer, provider, ds, steps=lc.steps, key=key,
-            start_step=start_step,
+            start_step=start_step, pipeline=lc.pipeline,
             callbacks=self.default_callbacks() + list(callbacks))
         history = train_loop.run()
         final = history[-1]["step"] + 1 if history else start_step

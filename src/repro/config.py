@@ -331,11 +331,22 @@ class PerfConfig:
     ``policy_dtype``: explicit activation compute dtype for the velocity
     field ("" = the parameter dtype, today's behaviour; log-probabilities
     and the optimizer always stay float32).  ``log_memory``: compile the
-    update ahead of time and report ``memory_analysis()`` byte counts."""
+    update ahead of time and report ``memory_analysis()`` byte counts.
+    ``offload_rewards``: park the frozen reward-tower params in host
+    memory and thread them into the rewards/fused jit as *arguments*
+    (H2D prefetched by the TrainLoop while the previous step's backward
+    runs) instead of keeping them device-resident as trace-time
+    constants — frees their device bytes, f32-rounding-equal (a
+    different compiled program).  ``remat_offload``: under
+    ``remat="scan"``, offload the scan body's saved velocity residual
+    to host memory via ``jax.checkpoint_policies
+    .save_and_offload_only_these_names`` instead of recomputing it."""
     remat: str = "none"            # none | scan | block
     fuse_step: bool = False
     policy_dtype: str = ""         # "" | "bfloat16" | "float32"
     log_memory: bool = False
+    offload_rewards: bool = False
+    remat_offload: bool = False    # requires remat="scan"
 
 
 @dataclass(frozen=True)
@@ -353,8 +364,15 @@ class DataConfig:
 
 @dataclass(frozen=True)
 class LoopConfig:
-    """TrainLoop behaviour: length, logging, checkpointing, early stop."""
+    """TrainLoop behaviour: length, logging, checkpointing, early stop.
+
+    ``pipeline``: max train steps in flight before the loop drains metrics
+    (1 = today's fully sequential loop, bit-identical; K>1 overlaps the
+    host-side work of step N+1..N+K-1 with step N's device execution —
+    metrics are observed up to K-1 steps late, but *what* is computed
+    never changes; see ``repro.api.loop``)."""
     steps: int = 100
+    pipeline: int = 1                    # max dispatched-not-drained steps
     log_every: int = 10                  # 0 -> silent
     save_every: int = 50                 # 0 -> no periodic checkpoints
     ckpt_dir: str = "checkpoints"

@@ -41,18 +41,57 @@ class MultiRewardLoader:
     def __len__(self) -> int:
         return len(self.models)
 
+    def param_store(self) -> Dict[str, object]:
+        """The deduplicated {model_id: params} store (one entry per unique
+        frozen backbone, shared across the rewards referencing it)."""
+        return dict(self._param_store)
+
+    def rebase(self, store: Dict[str, object]) -> None:
+        """Replace the param store wholesale (``perf.offload_rewards``
+        moves it to host memory at trainer construction) and repoint every
+        model at the new copies.  Runs before any trace."""
+        if set(store) != set(self._param_store):
+            raise ValueError(
+                f"rebase store keys {sorted(store)} != loaded model ids "
+                f"{sorted(self._param_store)}")
+        self._param_store = dict(store)
+        self.bind(self._param_store)
+
+    def bind(self, store: Dict[str, object]) -> None:
+        """Point every model at params from ``store`` (keyed by model_id).
+        ``compute_all`` uses this to evaluate under caller-supplied params
+        — inside the rewards jit they are tracers, so the scorers compute
+        on the threaded-in arguments instead of captured constants."""
+        for model in self.models:
+            model.set_params(store[model.model_id])
+
     def compute_all(self, x0: jax.Array, cond_meta: Dict, *,
-                    group_size: int) -> Dict[str, jax.Array]:
+                    group_size: int, params: Dict[str, object] = None
+                    ) -> Dict[str, jax.Array]:
         """Returns {reward_name: (B,) raw rewards} for every configured
-        reward (groupwise models are evaluated within GRPO groups)."""
-        out = {}
-        for i, (spec, model) in enumerate(zip(self.specs, self.models)):
-            name = f"{spec.reward_type}:{i}"
-            if model.kind == "groupwise":
-                out[name] = model.score(x0, cond_meta, group_size=group_size)
-            else:
-                out[name] = model.score(x0, cond_meta)
-        return out
+        reward (groupwise models are evaluated within GRPO groups).
+
+        ``params`` optionally overrides the resident param store for this
+        evaluation (the ``perf.offload_rewards`` path passes the jit-
+        argument tower store); the models are re-bound to the stable store
+        afterwards so no trace-time tracer outlives its trace."""
+        if params is not None:
+            self.bind(params)
+        try:
+            out = {}
+            for i, (spec, model) in enumerate(zip(self.specs, self.models)):
+                name = f"{spec.reward_type}:{i}"
+                if model.kind == "groupwise":
+                    out[name] = model.score(x0, cond_meta,
+                                            group_size=group_size)
+                else:
+                    out[name] = model.score(x0, cond_meta)
+            return out
+        finally:
+            if params is not None:
+                # jaxlint: disable=R003 — restore target: rebase() runs
+                # once at trainer construction, strictly before any trace
+                self.bind(self._param_store)
 
     def weight_map(self) -> Dict[str, float]:
         return {f"{s.reward_type}:{i}": s.weight

@@ -12,6 +12,7 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
 
 from repro.core.schedulers import SDESchedulerMixin
 from repro.models.flow import FlowAdapter
@@ -34,22 +35,41 @@ class Trajectory(NamedTuple):
 SDE_MODES = ("mixed", "all_sde", "all_ode")
 
 
-def checkpoint_scan_body(body, remat: str):
+def checkpoint_scan_body(body, remat: str, policy=None):
     """Wrap a ``lax.scan`` body in ``jax.checkpoint`` under the
     ``PerfConfig.remat`` policy — the one place the policy maps onto the
     primitive (the rollout below and the GRPO loss scan both use it).
     Applies for both "scan" and "block": block remat checkpoints layers
     *inside* the body too, but without the outer scan checkpoint the scan
-    backward would still save every body's residuals, defeating it."""
+    backward would still save every body's residuals, defeating it.
+
+    ``policy`` is an optional ``jax.checkpoint`` saveable-residual policy
+    (``perf.remat_offload`` passes the host-offload policy built in
+    ``repro.perf`` — core cannot import that package, so the resolved
+    policy object is threaded in); residuals it names must be tagged with
+    ``checkpoint_name`` inside ``body``."""
     if remat == "none":
         return body
+    if policy is not None:
+        return jax.checkpoint(body, policy=policy)
     return jax.checkpoint(body)
+
+
+def name_residual(x: jax.Array, policy, name: str = "velocity"
+                  ) -> jax.Array:
+    """Tag ``x`` as a named checkpoint residual when an offload ``policy``
+    is active (identity otherwise — plain remat stays byte-for-byte the
+    program it always was)."""
+    if policy is None:
+        return x
+    return checkpoint_name(x, name)
 
 
 def rollout(adapter: FlowAdapter, params, cond: jax.Array, key: jax.Array,
             scheduler: SDESchedulerMixin, num_steps: int,
             sde_mask: Optional[jax.Array] = None, *,
-            sde_mode: str = "mixed", remat: str = "none") -> Trajectory:
+            sde_mode: str = "mixed", remat: str = "none",
+            remat_policy=None) -> Trajectory:
     """cond: (B, Lc, cond_dim) — already group-repeated by the caller.
 
     ``sde_mode`` statically specializes the scan body when the caller
@@ -63,7 +83,9 @@ def rollout(adapter: FlowAdapter, params, cond: jax.Array, key: jax.Array,
 
     ``remat`` ("none" | "scan" | "block", ``PerfConfig.remat``) wraps the
     scan body in ``jax.checkpoint``; "block" additionally threads the
-    backbone's per-layer remat through ``adapter.velocity``."""
+    backbone's per-layer remat through ``adapter.velocity``.
+    ``remat_policy`` (``perf.remat_offload``) names the per-step velocity
+    as a host-offloadable residual instead of recomputing it."""
     if sde_mode not in SDE_MODES:
         raise ValueError(f"sde_mode must be one of {SDE_MODES}, "
                          f"got {sde_mode!r}")
@@ -82,21 +104,27 @@ def rollout(adapter: FlowAdapter, params, cond: jax.Array, key: jax.Array,
     if sde_mode == "all_ode":
         def body(x, inp):
             t, t_next, tb = inp
-            v = adapter.velocity(params, x, tb, cond, remat=block)
+            v = name_residual(
+                adapter.velocity(params, x, tb, cond, remat=block),
+                remat_policy)
             x_next = scheduler.step_ode(v, x, t, t_next)
             return x_next, (x_next, jnp.zeros((B,), F32))
         xs_in = (ts[:-1], ts[1:], tbs)
     elif sde_mode == "all_sde":
         def body(x, inp):
             t, t_next, tb, k = inp
-            v = adapter.velocity(params, x, tb, cond, remat=block)
+            v = name_residual(
+                adapter.velocity(params, x, tb, cond, remat=block),
+                remat_policy)
             x_next, logp = scheduler.step(v, x, t, t_next, k)
             return x_next, (x_next, logp)
         xs_in = (ts[:-1], ts[1:], tbs, jax.random.split(k_steps, num_steps))
     else:
         def body(x, inp):
             t, t_next, tb, is_sde, k = inp
-            v = adapter.velocity(params, x, tb, cond, remat=block)
+            v = name_residual(
+                adapter.velocity(params, x, tb, cond, remat=block),
+                remat_policy)
             x_sde, logp = scheduler.step(v, x, t, t_next, k)
             x_ode = scheduler.step_ode(v, x, t, t_next)
             x_next = jnp.where(is_sde, x_sde, x_ode)
@@ -105,7 +133,7 @@ def rollout(adapter: FlowAdapter, params, cond: jax.Array, key: jax.Array,
         xs_in = (ts[:-1], ts[1:], tbs, sde_mask,
                  jax.random.split(k_steps, num_steps))
 
-    body = checkpoint_scan_body(body, remat)
+    body = checkpoint_scan_body(body, remat, policy=remat_policy)
     _, (xs_tail, logps) = jax.lax.scan(body, x_init, xs_in)
     xs = jnp.concatenate([x_init[None], xs_tail], axis=0)
     return Trajectory(xs=xs, logps=logps, ts=ts, sde_mask=sde_mask, cond=cond)

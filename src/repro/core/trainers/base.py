@@ -65,6 +65,10 @@ class BaseTrainer:
         self.opt_cfg = opt_cfg
         self.dist = dist or DistConfig()
         self.perf = perf_lib.validate(perf or PerfConfig())
+        # resolved once: the jax.checkpoint offload policy for the scan
+        # bodies (None unless perf.remat_offload — plain remat stays the
+        # bit-identical program it always was)
+        self._remat_policy = perf_lib.remat_policy(self.perf)
         if self.dist.microbatch < 0:
             raise ValueError(
                 f"dist.microbatch must be >= 0, got {self.dist.microbatch}")
@@ -106,6 +110,17 @@ class BaseTrainer:
                                else self.plan.state_shardings(self.state))
         specs = flow_cfg.rewards or DEFAULT_REWARDS
         self.loader = MultiRewardLoader(specs, k_r)
+        # perf.offload_rewards: park the frozen towers in host memory; the
+        # rewards/fused jit then takes them as an ARGUMENT (closure capture
+        # would bake the trace-time values in as device constants — the
+        # PR-2 class, jaxlint R003 — and keep them resident)
+        self._reward_store_host = None
+        self._reward_prefetch = None
+        self._reward_put_sharding = (None if self.mesh is None
+                                     else distributed.replicated(self.mesh))
+        if self.perf.offload_rewards:
+            self._reward_store_host = perf_lib.offload_param_store(
+                self.loader)
         self._lr = optim.make_schedule(opt_cfg)
         self._engine = None
         self._sample_jit = distributed.jit_sample(self._sample, self.mesh,
@@ -114,8 +129,9 @@ class BaseTrainer:
             self._update, self.mesh, self.state_sharding,
             donate=self.dist.donate_state and self.donate_state_ok,
             extras_sharding=self.update_extras_sharding())
-        self._rewards_jit = distributed.jit_rewards(functools.partial(
-            self._rewards, group_size=flow_cfg.group_size), self.mesh)
+        self._rewards_jit = distributed.jit_rewards(
+            functools.partial(self._rewards, group_size=flow_cfg.group_size),
+            self.mesh, with_params=self.perf.offload_rewards)
         self._fused_jit = (perf_lib.make_fused_step(self)
                            if self.perf.fuse_step else None)
 
@@ -172,7 +188,8 @@ class BaseTrainer:
                 sde_mask) -> Trajectory:
         return rollout(self.adapter, params, cond, key, self.scheduler,
                        self.flow.num_steps, sde_mask,
-                       sde_mode=self.sde_mode, remat=self.perf.remat)
+                       sde_mode=self.sde_mode, remat=self.perf.remat,
+                       remat_policy=self._remat_policy)
 
     def sample(self, params, cond: jax.Array, key: jax.Array, it: int = 0
                ) -> Trajectory:
@@ -190,15 +207,48 @@ class BaseTrainer:
         return self._sample_jit(params, cond_g, key, mask)
 
     # -------------------------------------------------------------- rewards
-    def _rewards(self, x0: jax.Array, cond_meta: Dict, *, group_size: int
+    @property
+    def offloads_rewards(self) -> bool:
+        """Whether the frozen reward-tower params live in host memory
+        (``perf.offload_rewards``) and are threaded into the rewards/fused
+        jit as arguments."""
+        return self._reward_store_host is not None
+
+    def prefetch_reward_params(self) -> None:
+        """Start the async H2D copy of the host-offloaded reward towers
+        (no-op when ``perf.offload_rewards`` is off or a prefetch is
+        already pending).  The TrainLoop calls this right after each
+        dispatch so the transfer overlaps the in-flight step's device
+        work; the next ``step`` consumes it via ``_take_reward_params``."""
+        if self._reward_store_host is None or \
+                self._reward_prefetch is not None:
+            return
+        self._reward_prefetch = perf_lib.prefetch_tree(
+            self._reward_store_host, self._reward_put_sharding)
+
+    def _take_reward_params(self):
+        """The device copy of the reward towers for this step: the pending
+        prefetch if the loop armed one, else a fresh (synchronously
+        enqueued, still async) transfer."""
+        rp, self._reward_prefetch = self._reward_prefetch, None
+        if rp is None:
+            rp = perf_lib.prefetch_tree(self._reward_store_host,
+                                        self._reward_put_sharding)
+        return rp
+
+    def _rewards(self, x0: jax.Array, cond_meta: Dict, reward_params=None,
+                 *, group_size: int
                  ) -> Tuple[Dict[str, jax.Array], jax.Array,
                             Dict[str, jax.Array]]:
         """Returns (raw rewards, advantages, reward stats) — the stats (the
         weight_map-weighted ``reward_mean`` the optimizer ascends plus the
         per-reward means) are computed ON DEVICE here, inside the
         rewards/fused jit, so ``step`` never dispatches per-metric eager
-        reductions."""
-        rew = self.loader.compute_all(x0, cond_meta, group_size=group_size)
+        reductions.  ``reward_params`` (``perf.offload_rewards``) is the
+        host-offloaded tower store threaded in as a jit argument; None
+        keeps the historical resident-constant path."""
+        rew = self.loader.compute_all(x0, cond_meta, group_size=group_size,
+                                      params=reward_params)
         adv = compute_advantages(self.flow.advantage_agg, rew,
                                  self.loader.weight_map(), group_size)
         weights = self.loader.weight_map()
@@ -271,13 +321,22 @@ class BaseTrainer:
             if mask is None:
                 mask = jnp.ones((self.flow.num_steps,), bool)
             extras = self.update_extras()
-            self.state, metrics = self._fused_jit(
-                self.state, cond_g, key, jnp.int32(it), mask, extras)
+            if self.offloads_rewards:
+                self.state, metrics = self._fused_jit(
+                    self.state, cond_g, key, jnp.int32(it), mask, extras,
+                    self._take_reward_params())
+            else:
+                self.state, metrics = self._fused_jit(
+                    self.state, cond_g, key, jnp.int32(it), mask, extras)
             return metrics
         k_s, k_u = jax.random.split(jax.random.fold_in(key, it))
         traj = self.sample(self.state.params, cond, k_s, it)
         cond_meta = {"cond": traj.cond}
-        _, adv, reward_stats = self._rewards_jit(traj.x0, cond_meta)
+        if self.offloads_rewards:
+            _, adv, reward_stats = self._rewards_jit(
+                traj.x0, cond_meta, self._take_reward_params())
+        else:
+            _, adv, reward_stats = self._rewards_jit(traj.x0, cond_meta)
         extras = self.update_extras()
         self.state, metrics = self._update_jit(self.state, traj, adv, k_u,
                                                extras)

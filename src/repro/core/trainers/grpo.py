@@ -9,7 +9,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import registry
-from repro.core.rollout import Trajectory, checkpoint_scan_body
+from repro.core.rollout import Trajectory, checkpoint_scan_body, \
+    name_residual
 from repro.core.trainers.base import BaseTrainer
 
 F32 = jnp.float32
@@ -38,7 +39,10 @@ class FlowGRPOTrainer(BaseTrainer):
 
         def per_step(carry, inp):
             x_t, x_next, t, t_next, tb, logp_old, is_sde, t_idx = inp
-            v = self.velocity(params, x_t, tb, cond)
+            # the body's dominant residual: under perf.remat_offload it is
+            # saved to host memory instead of recomputed in the backward
+            v = name_residual(self.velocity(params, x_t, tb, cond),
+                              self._remat_policy)
             logp_new = self.scheduler.logprob(v, x_t, t, t_next, x_next)
             if use_kernel:
                 # fused ratio/clip/advantage Pallas kernel (vanilla GRPO path;
@@ -68,7 +72,8 @@ class FlowGRPOTrainer(BaseTrainer):
         # backbone activations live in the backward (scan-body checkpoint
         # is bit-exact on XLA:CPU — see repro.perf); the (T, B) timestep
         # batch is hoisted out of the body as scan input
-        per_step = checkpoint_scan_body(per_step, self.perf.remat)
+        per_step = checkpoint_scan_body(per_step, self.perf.remat,
+                                        policy=self._remat_policy)
         t_indices = jnp.arange(T)
         tbs = jnp.broadcast_to(traj.ts[:-1, None], (T, B)).astype(F32)
         (loss_sum, clip_sum, n_sde), _ = jax.lax.scan(

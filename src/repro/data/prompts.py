@@ -47,15 +47,37 @@ class PromptDataset:
     def __len__(self) -> int:
         return len(self.prompts)
 
-    def epoch(self, epoch_idx: int) -> Iterator[List[str]]:
+    @property
+    def batches_per_epoch(self) -> int:
+        n = len(self.prompts)
+        if n < self.batch_size:
+            return 0
+        return (n - self.batch_size) // self.batch_size + 1
+
+    def epoch(self, epoch_idx: int, start_batch: int = 0
+              ) -> Iterator[List[str]]:
         rng = np.random.RandomState(self.seed + epoch_idx)
         order = rng.permutation(len(self.prompts))
-        for i in range(0, len(order) - self.batch_size + 1, self.batch_size):
+        for i in range(start_batch * self.batch_size,
+                       len(order) - self.batch_size + 1, self.batch_size):
             yield [self.prompts[j] for j in order[i:i + self.batch_size]]
 
-    def infinite(self) -> Iterator[List[str]]:
-        for e in itertools.count():
-            yield from self.epoch(e)
+    def infinite(self, skip: int = 0) -> Iterator[List[str]]:
+        """Endless shuffled batches; ``skip`` fast-forwards past the first
+        ``skip`` batches in O(1) (each epoch's permutation is a pure
+        function of ``seed + epoch_idx``, so resuming at batch N needs no
+        replay — the TrainLoop's resume path relies on the skipped and
+        replayed streams being identical)."""
+        if skip < 0:
+            raise ValueError(f"skip must be >= 0, got {skip}")
+        per = self.batches_per_epoch
+        if per == 0:
+            raise ValueError(
+                f"dataset of {len(self.prompts)} prompts yields no batch of "
+                f"size {self.batch_size} — nothing to iterate")
+        e0, off = divmod(skip, per)
+        for e in itertools.count(e0):
+            yield from self.epoch(e, start_batch=off if e == e0 else 0)
 
 
 @registry.register("dataset", "synthetic")

@@ -233,38 +233,49 @@ def jit_sample(fn: Callable, mesh: Optional[Mesh], params_sharding=None):
                      traj_shardings(mesh))
 
 
-def jit_rewards(fn: Callable, mesh: Optional[Mesh]):
-    """``fn(x0, cond_meta) -> (rewards, adv, stats)`` — batch-major inputs
-    and outputs sharded over the data axis (the stats dict is scalar
-    reductions, replicated by construction)."""
+def jit_rewards(fn: Callable, mesh: Optional[Mesh], *,
+                with_params: bool = False):
+    """``fn(x0, cond_meta[, reward_params]) -> (rewards, adv, stats)`` —
+    batch-major inputs and outputs sharded over the data axis (the stats
+    dict is scalar reductions, replicated by construction).
+    ``with_params`` (``perf.offload_rewards``) accepts the host-offloaded
+    reward-tower store as a third, replicated argument."""
     if mesh is None:
         return jax.jit(fn)
     b0 = batch_sharding(mesh, 0)
+    if with_params:
+        return _plan_jit(fn, (b0, b0, replicated(mesh)))
     return _plan_jit(fn, (b0, b0))
 
 
 def jit_fused_step(fn: Callable, mesh: Optional[Mesh], state_sharding=None,
-                   *, donate: bool = True, extras_sharding=None):
-    """``fn(state, cond_g, key, it, sde_mask, extras) -> (state, metrics)``
-    — the ``repro.perf`` fused train step: RLState donated and laid out per
-    the PartitionPlan (``state_sharding`` — None replicates), the
-    group-repeated cond batch sharded over the data axis (the trajectory it
-    becomes inside never crosses a jit boundary, so XLA propagates the
-    batch sharding through rollout → rewards → update and inserts the same
-    collectives the unfused path gets).  Donation rewrites the state in
-    place per shard: in- and out-shardings are the same pytree.
-    ``extras_sharding`` lays out the ``update_extras()`` tuple — None
-    replicates; NFT's ref_params alias the placed params, so they arrive
-    model-sharded under mp>1 and must be accepted in that layout."""
+                   *, donate: bool = True, extras_sharding=None,
+                   with_reward_params: bool = False):
+    """``fn(state, cond_g, key, it, sde_mask, extras[, reward_params]) ->
+    (state, metrics)`` — the ``repro.perf`` fused train step: RLState
+    donated and laid out per the PartitionPlan (``state_sharding`` — None
+    replicates), the group-repeated cond batch sharded over the data axis
+    (the trajectory it becomes inside never crosses a jit boundary, so XLA
+    propagates the batch sharding through rollout → rewards → update and
+    inserts the same collectives the unfused path gets).  Donation
+    rewrites the state in place per shard: in- and out-shardings are the
+    same pytree.  ``extras_sharding`` lays out the ``update_extras()``
+    tuple — None replicates; NFT's ref_params alias the placed params, so
+    they arrive model-sharded under mp>1 and must be accepted in that
+    layout.  ``with_reward_params`` (``perf.offload_rewards``) appends the
+    host-offloaded reward-tower store as a trailing replicated argument."""
     donate_argnums = (0,) if donate else ()
     if mesh is None:
         return jax.jit(fn, donate_argnums=donate_argnums)
     rep = replicated(mesh)
     ssh = state_sharding if state_sharding is not None else rep
     esh = extras_sharding if extras_sharding is not None else rep
+    in_sh = [ssh, batch_sharding(mesh, 0), rep, rep, rep, esh]
+    if with_reward_params:
+        in_sh.append(rep)
     return jax.jit(
         fn,
-        in_shardings=(ssh, batch_sharding(mesh, 0), rep, rep, rep, esh),
+        in_shardings=tuple(in_sh),
         out_shardings=(ssh, rep),
         donate_argnums=donate_argnums)
 

@@ -48,9 +48,15 @@ def main(argv=None) -> None:
     print(f"[train] devices={jax.local_device_count()} data_parallel={dp} "
           f"model_parallel={mp} microbatch={exp.cfg.dist.microbatch or 1}")
     p = exp.cfg.perf
+    if exp.cfg.loop.pipeline != 1:
+        print(f"[perf] loop.pipeline={exp.cfg.loop.pipeline} "
+              "(metrics drain up to pipeline-1 steps late; computation "
+              "is unchanged)")
     if p != type(p)():
         print(f"[perf] remat={p.remat} fuse_step={p.fuse_step}"
-              + (f" policy_dtype={p.policy_dtype}" if p.policy_dtype else ""))
+              + (f" policy_dtype={p.policy_dtype}" if p.policy_dtype else "")
+              + (" offload_rewards=true" if p.offload_rewards else "")
+              + (" remat_offload=true" if p.remat_offload else ""))
     if p.log_memory:
         tr = exp.build_trainer()
         d_cfg = exp.cfg.data

@@ -11,8 +11,9 @@ door) and is a *runtime* choice — checkpoints move freely across policies.
 * ``policy``   — PerfConfig validation, remat helpers, activation dtype
 * ``fused``    — the single-jit sample→rewards→advantages→update step
 * ``memory``   — ``compiled.memory_analysis()`` introspection
+* ``offload``  — host-memory offload: reward towers + remat residuals
 
-Exactness contract (asserted in tests/test_perf.py):
+Exactness contract (asserted in tests/test_perf.py / test_pipeline.py):
 
 * ``remat="scan"``  : bit-identical to ``"none"`` on XLA:CPU — a
   ``jax.checkpoint`` around a ``lax.scan`` body is structurally isolated,
@@ -21,13 +22,21 @@ Exactness contract (asserted in tests/test_perf.py):
   re-fuses open-graph remat and reassociates f32 reductions.
 * ``fuse_step``     : f32-rounding-equal to the three-jit path (same ops,
   different compiled program).
+* ``offload_rewards`` : f32-rounding-equal — reward params arrive as jit
+  *arguments* instead of baked-in constants, a different compiled program.
+* ``remat_offload``   : f32-rounding-equal — saved-to-host residuals
+  replace recompute in the scan backward.
 """
 from repro.perf.fused import make_fused_step
 from repro.perf.memory import analysis_dict, update_memory
-from repro.perf.policy import (REMAT_MODES, block_remat,
+from repro.perf.offload import (offload_param_store, prefetch_tree,
+                                reward_tower_report, tree_bytes)
+from repro.perf.policy import (REMAT_MODES, block_remat, remat_policy,
                                resolve_policy_dtype, validate)
 
 __all__ = [
-    "REMAT_MODES", "block_remat", "resolve_policy_dtype", "validate",
-    "make_fused_step", "analysis_dict", "update_memory",
+    "REMAT_MODES", "block_remat", "remat_policy", "resolve_policy_dtype",
+    "validate", "make_fused_step", "analysis_dict", "update_memory",
+    "offload_param_store", "prefetch_tree", "reward_tower_report",
+    "tree_bytes",
 ]

@@ -33,10 +33,17 @@ def make_fused_step(trainer):
     and the divisibility check stay host-side so the sharded layout
     matches the unfused entry points.  ``key``/``it`` are the raw loop key
     and iteration index; the per-iteration fold + split happens on device
-    (``it`` is a traced scalar, so iterating never recompiles)."""
-    group_size = trainer.flow.group_size
+    (``it`` is a traced scalar, so iterating never recompiles).
 
-    def fused(state, cond_g, key, it, sde_mask, extras):
+    With ``perf.offload_rewards`` the fused step takes the host-offloaded
+    reward-tower store as a trailing argument (threaded by
+    ``BaseTrainer.step`` from the loop's prefetch) — never a closure, which
+    would re-bake the towers in as device-resident constants and undo the
+    offload."""
+    group_size = trainer.flow.group_size
+    offloaded = trainer.offloads_rewards
+
+    def _step(state, cond_g, key, it, sde_mask, extras, reward_params):
         k_s, k_u = jax.random.split(jax.random.fold_in(key, it))
         traj = trainer._sample(state.params, cond_g, k_s, sde_mask)
         # samples are data from the behaviour policy: the unfused path gets
@@ -44,12 +51,22 @@ def make_fused_step(trainer):
         # (the rollout is differentiable w.r.t. params otherwise)
         traj = jax.tree.map(jax.lax.stop_gradient, traj)
         _, adv, reward_stats = trainer._rewards(
-            traj.x0, {"cond": traj.cond}, group_size=group_size)
+            traj.x0, {"cond": traj.cond}, reward_params,
+            group_size=group_size)
         new_state, metrics = trainer._update(state, traj, adv, k_u, extras)
         metrics.update(reward_stats)
         return new_state, metrics
 
+    if offloaded:
+        def fused(state, cond_g, key, it, sde_mask, extras, reward_params):
+            return _step(state, cond_g, key, it, sde_mask, extras,
+                         reward_params)
+    else:
+        def fused(state, cond_g, key, it, sde_mask, extras):
+            return _step(state, cond_g, key, it, sde_mask, extras, None)
+
     donate = trainer.dist.donate_state and trainer.donate_state_ok
     return distributed.jit_fused_step(
         fused, trainer.mesh, getattr(trainer, "state_sharding", None),
-        donate=donate, extras_sharding=trainer.update_extras_sharding())
+        donate=donate, extras_sharding=trainer.update_extras_sharding(),
+        with_reward_params=offloaded)

@@ -89,13 +89,20 @@ def update_memory(trainer, cond: jax.Array) -> Dict[str, Dict]:
     key = _struct(jax.random.PRNGKey(0))
     state = _struct(trainer.state)
     extras = _struct(trainer.update_extras())
+    from repro.perf.offload import reward_tower_report
     out = {"update": analysis_dict(
         trainer._update_jit.lower(state, traj, adv, key, extras).compile()),
-        "state": state_bytes(trainer)}
+        "state": state_bytes(trainer),
+        # the frozen-tower footprint and what perf.offload_rewards frees
+        # from the device (host-side shape arithmetic, nothing compiles)
+        "reward_towers": reward_tower_report(trainer)}
     if trainer._fused_jit is not None:
         cond_g = jax.ShapeDtypeStruct((B, Lc, D), F32)
         it = jax.ShapeDtypeStruct((), jnp.int32)
         mask = jax.ShapeDtypeStruct((T,), jnp.bool_)
+        fused_args = [state, cond_g, key, it, mask, extras]
+        if trainer.offloads_rewards:
+            fused_args.append(_struct(trainer._reward_store_host))
         out["fused"] = analysis_dict(trainer._fused_jit.lower(
-            state, cond_g, key, it, mask, extras).compile())
+            *fused_args).compile())
     return out

@@ -32,7 +32,24 @@ def validate(perf: PerfConfig) -> PerfConfig:
         raise ValueError(
             f"perf.policy_dtype must be one of "
             f"{sorted(POLICY_DTYPES)}, got {perf.policy_dtype!r}")
+    if perf.remat_offload and perf.remat != "scan":
+        raise ValueError(
+            "perf.remat_offload saves the scan body's named residuals to "
+            "host memory and only composes with the scan-body checkpoint "
+            f"— set perf.remat=scan (got remat={perf.remat!r})")
     return perf
+
+
+def remat_policy(perf: PerfConfig):
+    """The ``jax.checkpoint`` policy for the scan-body remat, or None.
+    Only ``perf.remat_offload`` sets one (host-offload the named velocity
+    residual instead of recomputing it — ``repro.perf.offload``); plain
+    ``remat="scan"`` stays policy-free, preserving its bit-identical
+    exactness class."""
+    if not perf.remat_offload:
+        return None
+    from repro.perf.offload import remat_offload_policy
+    return remat_offload_policy()
 
 
 def resolve_policy_dtype(perf: PerfConfig):

@@ -350,6 +350,85 @@ def sweep(fns, x):
     assert rules_of(findings) == ["R006"]
 
 
+# ------------------------------------------------------------------- R007
+
+def test_r007_pre_pipeline_loop_flagged(tmp_path):
+    # source-level reconstruction of the pre-pipeline TrainLoop: dispatch a
+    # jitted step, then immediately device_get its metrics in the same
+    # iteration — the drain blocks the next dispatch
+    findings = lint(tmp_path, """\
+import jax
+
+class Loop:
+    def __init__(self, fn, state):
+        self._step_jit = jax.jit(fn)
+        self.state = state
+
+    def run(self, batches, key):
+        history = []
+        for it, batch in enumerate(batches):
+            self.state, metrics = self._step_jit(self.state, batch, key)
+            m = jax.device_get(metrics)
+            history.append(m)
+        return history
+""")
+    assert rules_of(findings) == ["R007"]
+    assert len(findings) == 1
+
+
+def test_r007_float_on_dispatched_output_flagged(tmp_path):
+    findings = lint(tmp_path, """\
+import jax
+
+def run(step, xs, state):
+    step_jit = jax.jit(step)
+    losses = []
+    for x in xs:
+        state, loss = step_jit(state, x)
+        losses.append(float(loss))
+    return losses
+""")
+    assert rules_of(findings) == ["R007"]
+
+
+def test_r007_lagged_deque_drain_clean(tmp_path):
+    # the pipelined shape this PR's TrainLoop uses: buffer the in-flight
+    # step's outputs and drain them >=1 step late / after the loop
+    findings = lint(tmp_path, """\
+import collections
+import jax
+
+def run(step, xs, state):
+    step_jit = jax.jit(step)
+    pending = collections.deque()
+    out = []
+    for x in xs:
+        state, loss = step_jit(state, x)
+        pending.append(loss)
+        if len(pending) > 1:
+            out.append(float(jax.device_get(pending.popleft())))
+    while pending:
+        out.append(float(jax.device_get(pending.popleft())))
+    return out
+""")
+    assert findings == []
+
+
+def test_r007_drain_after_loop_clean(tmp_path):
+    findings = lint(tmp_path, """\
+import jax
+
+def run(step, xs, state):
+    step_jit = jax.jit(step)
+    losses = []
+    for x in xs:
+        state, loss = step_jit(state, x)
+        losses.append(loss)
+    return [float(v) for v in jax.device_get(losses)]
+""")
+    assert findings == []
+
+
 # ----------------------------------------------------- suppressions / R000
 
 def test_suppression_with_reason_honored(tmp_path):
@@ -581,7 +660,8 @@ def test_repo_is_clean_modulo_baseline(monkeypatch, capsys):
 
 
 def test_every_rule_has_fixture_coverage():
-    covered = {"R000", "R001", "R002", "R003", "R004", "R005", "R006"}
+    covered = {"R000", "R001", "R002", "R003", "R004", "R005", "R006",
+               "R007"}
     assert set(rule_ids()) == covered, (
         "new rule registered — add positive/negative fixtures for it in "
         "this file and extend `covered`")

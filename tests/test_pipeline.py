@@ -1,0 +1,255 @@
+"""Pipelined-vs-sequential TrainLoop equivalence suite.
+
+The exactness contract of ``loop.pipeline`` (see repro.api.loop):
+
+* ``pipeline=1`` is BIT-IDENTICAL to the sequential dispatch→drain loop —
+  same params after N AdamW steps, same metric history;
+* ``pipeline=K>1`` changes only WHEN metrics are observed (rows arrive up
+  to K-1 steps after dispatch), never WHAT is computed — params and the
+  metric values stay bitwise equal across K;
+* a checkpoint taken mid-pipeline sees exactly-post-step state (the
+  ``wants_sync`` drain barrier), so crash/resume stays bit-identical;
+* the dataset ``skip(n)`` fast path and the replay-skip fallback position
+  a resumed stream identically.
+
+The data×pipeline composition test needs 4 faked devices and is skipped
+elsewhere; `make test-pipeline` re-runs this file with XLA_FLAGS set.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, registry
+from repro.api import Experiment, loop as loop_lib
+from repro.config import (DataConfig, DistConfig, FlowRLConfig, LoopConfig,
+                          OptimConfig, PerfConfig, RewardSpec, RunConfig)
+from repro.core.preprocess import ConditionProvider
+from repro.data.prompts import PromptDataset, synthetic_prompts
+
+TINY_ENCODER = dict(cond_dim=32, cond_len=4, vocab=256, hidden=64)
+KEY = jax.random.PRNGKey(7)
+
+TINY_FLOW = FlowRLConfig(
+    num_steps=2, group_size=2, latent_tokens=4, latent_dim=4,
+    rewards=(RewardSpec("text_render", 1.0,
+                        args={"latent_dim": 4, "latent_tokens": 4,
+                              "cond_dim": 32}),))
+TINY_OPT = OptimConfig(lr=1e-3, total_steps=64, warmup_steps=2)
+
+needs4 = pytest.mark.skipif(
+    jax.local_device_count() < 4,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=4")
+
+
+def _trainer(perf=None, dist=None):
+    return registry.build("trainer", "flow_grpo",
+                          configs.get_reduced("flux_dit"), TINY_FLOW,
+                          TINY_OPT, key=jax.random.PRNGKey(0), cond_dim=32,
+                          perf=perf, dist=dist)
+
+
+def _provider():
+    return ConditionProvider(preprocessing=False, encoder_kw=TINY_ENCODER)
+
+
+def _dataset():
+    return PromptDataset(synthetic_prompts(16), batch_size=4, seed=0)
+
+
+def _loop(trainer, steps=6, pipeline=1, start_step=0, callbacks=(),
+          dataset=None):
+    return loop_lib.TrainLoop(trainer, _provider(),
+                              dataset if dataset is not None else _dataset(),
+                              steps=steps, key=KEY, start_step=start_step,
+                              callbacks=callbacks, pipeline=pipeline)
+
+
+def _bits(tree):
+    """Bitwise-comparable leaves (bf16 viewed as u16)."""
+    out = []
+    for x in jax.tree.leaves(tree):
+        arr = np.asarray(jax.device_get(x))
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+        out.append(arr)
+    return out
+
+
+def _rows(history):
+    """History minus the wall-clock keys (the only K-dependent fields)."""
+    return [{k: v for k, v in r.items() if k not in ("dt", "steps_per_s")}
+            for r in history]
+
+
+def _assert_same_params(tr_a, tr_b):
+    la, lb = _bits(tr_a.state.params), _bits(tr_b.state.params)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(x, y)
+
+
+# ------------------------------------------------- pipeline=1 == sequential
+
+def _sequential_reference(trainer, provider, dataset, steps, key):
+    """The pre-pipeline loop, hand-rolled: dispatch one step, immediately
+    device_get its metrics, repeat."""
+    stream = dataset.infinite(0)
+    history = []
+    for it in range(steps):
+        prompts = next(stream)
+        cond = provider.get(prompts)["cond"]
+        metrics = trainer.step(cond, key, it=it)
+        m = jax.tree.map(float, jax.device_get(metrics))
+        row = {"step": it, "reward": m["reward_mean"], "loss": m["loss"],
+               "grad_norm": m["grad_norm"],
+               "encode_resident": provider.encoder_resident}
+        row.update({k: v for k, v in m.items() if k.startswith("reward/")})
+        history.append(row)
+    return history
+
+
+def test_pipeline1_bitwise_equals_sequential_reference():
+    ref_tr = _trainer()
+    ref_hist = _sequential_reference(ref_tr, _provider(), _dataset(), 6, KEY)
+    tr = _trainer()
+    hist = _loop(tr, steps=6, pipeline=1).run()
+    _assert_same_params(ref_tr, tr)
+    assert _rows(hist) == ref_hist
+
+
+# ------------------------------------------- pipeline=K: lagged, same math
+
+def test_pipeline4_same_math_lagged_observation():
+    tr1 = _trainer()
+    h1 = _loop(tr1, steps=6, pipeline=1).run()
+
+    tr4 = _trainer()
+    dispatched = []
+    orig_step = tr4.step
+
+    def counting_step(cond, key, *, it):
+        dispatched.append(it)
+        return orig_step(cond, key, it=it)
+
+    tr4.step = counting_step
+    lags = []
+
+    class Lag(loop_lib.Callback):
+        def on_step(self, loop, step, metrics):
+            lags.append(max(dispatched) - step)
+
+    h4 = _loop(tr4, steps=6, pipeline=4, callbacks=[Lag()]).run()
+
+    _assert_same_params(tr1, tr4)
+    assert _rows(h4) == _rows(h1)            # same values, same order
+    # ...but observed late: when step 0's row lands, steps 1..3 were
+    # already dispatched (depth-K lag, bounded by K-1)
+    assert max(lags) >= 1
+    assert all(0 <= lag <= 3 for lag in lags)
+
+
+def test_pipeline4_undonated_bitwise_equals_donated_sequential():
+    """The benchmark's run-ahead regime: on the CPU PJRT client donated
+    executions run synchronously, so the pipelined configs run with
+    ``dist.donate_state=false``.  Donation is a pure buffer policy —
+    un-donated K=4 must stay bitwise equal to the donated K=1 loop."""
+    tr1 = _trainer()
+    h1 = _loop(tr1, steps=6, pipeline=1).run()
+    tr4 = _trainer(dist=DistConfig(donate_state=False))
+    h4 = _loop(tr4, steps=6, pipeline=4).run()
+    _assert_same_params(tr1, tr4)
+    assert _rows(h4) == _rows(h1)
+
+
+def test_pipeline_depth_validated():
+    with pytest.raises(ValueError, match="pipeline"):
+        _loop(_trainer(), pipeline=0)
+
+
+# ------------------------------------- checkpoint/resume mid-pipeline
+
+def _tiny_cfg(tmp_path, steps, save_every=0, **loop_kw):
+    return RunConfig(
+        arch="flux_dit", reduced=True,
+        flow=FlowRLConfig(num_steps=2, group_size=2, latent_tokens=4,
+                          latent_dim=4, rewards=(),
+                          cache_dir=str(tmp_path / "cache")),
+        optim=OptimConfig(lr=1e-3, total_steps=8, warmup_steps=1),
+        data=DataConfig(n_prompts=8, batch_prompts=2, encoder=TINY_ENCODER),
+        loop=LoopConfig(steps=steps, save_every=save_every, log_every=0,
+                        ckpt_dir=str(tmp_path / "ckpt"), **loop_kw))
+
+
+def test_checkpoint_resume_mid_pipeline_bit_identical(tmp_path):
+    """A K=4 run interrupted at its step-2 checkpoint and resumed equals an
+    uninterrupted K=1 run — the wants_sync barrier makes the checkpoint see
+    exactly-post-step state even with steps in flight."""
+    straight = Experiment.from_config(
+        _tiny_cfg(tmp_path / "a", steps=4, save_every=2)).train()
+    Experiment.from_config(
+        _tiny_cfg(tmp_path / "b", steps=2, save_every=2, pipeline=4)).train()
+    resumed = Experiment.from_config(
+        _tiny_cfg(tmp_path / "b", steps=4, save_every=2, pipeline=4)).train()
+    assert resumed["start_step"] == 2
+    la, lb = _bits(straight["state"]), _bits(resumed["state"])
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(x, y)
+
+
+# --------------------------------------- resume stream positioning (skip)
+
+def test_dataset_skip_fast_path_equivalence():
+    """``infinite(skip=n)`` equals dropping n batches from ``infinite(0)``,
+    including across an epoch boundary (4 batches/epoch here)."""
+    per = _dataset().batches_per_epoch
+    assert per == 4
+    for skip in (0, 1, per, per + 2, 3 * per + 1):
+        slow = _dataset().infinite()
+        for _ in range(skip):
+            next(slow)
+        fast = _dataset().infinite(skip)
+        for _ in range(2 * per):
+            assert next(fast) == next(slow)
+
+
+class _NoSkipDataset:
+    """Dataset without the skip parameter — exercises TrainLoop's
+    replay-skip fallback."""
+
+    def __init__(self):
+        self._ds = _dataset()
+
+    def infinite(self):
+        return self._ds.infinite()
+
+
+def test_resume_equivalence_skip_and_fallback():
+    """Resuming at start_step positions the stream identically through the
+    O(1) skip fast path and the replay-skip fallback: both finish with the
+    params of an uninterrupted run."""
+    tr_full = _trainer()
+    _loop(tr_full, steps=6).run()
+
+    for dataset in (_dataset(), _NoSkipDataset()):
+        tr = _trainer()
+        _loop(tr, steps=3).run()
+        lp = _loop(tr, steps=6, start_step=3, dataset=dataset)
+        lp.run()
+        _assert_same_params(tr_full, tr)
+
+
+# -------------------------------------- composition: fused × dp=4 × K
+
+@needs4
+def test_pipeline_composes_with_fused_and_data_parallel():
+    perf = PerfConfig(fuse_step=True, offload_rewards=True)
+    dist = DistConfig(data_parallel=4)
+    tr1 = _trainer(perf=perf, dist=dist)
+    h1 = _loop(tr1, steps=4, pipeline=1).run()
+    tr4 = _trainer(perf=perf, dist=dist)
+    h4 = _loop(tr4, steps=4, pipeline=4).run()
+    _assert_same_params(tr1, tr4)
+    assert _rows(h4) == _rows(h1)
+    assert tr4.offloads_rewards
